@@ -1,0 +1,34 @@
+"""Paper Fig 3 — main result: accuracy & latency of vanilla base / vanilla
+small / SpecDecode / SpecReason / SpecReason+Decode under a fixed thinking
+budget."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (SchemeResult, evaluate, make_scheme, save_results,
+                     task_suite)
+
+SCHEMES = ("base", "small", "specdecode", "specreason", "specreason+decode")
+
+
+def run(n_tasks: int = 12, k_samples: int = 2, threshold: float = 6.5,
+        budget: int = 160) -> List[SchemeResult]:
+    print(f"[fig3] main comparison: {n_tasks} tasks x {k_samples} samples, "
+          f"tau={threshold}, budget={budget}")
+    suite = task_suite(n_tasks)
+    rows = [evaluate(s, make_scheme(s, threshold=threshold, budget=budget),
+                     suite, k_samples) for s in SCHEMES]
+    base = next(r for r in rows if r.name == "base")
+    sr = next(r for r in rows if r.name == "specreason")
+    sd = next(r for r in rows if r.name == "specdecode")
+    srd = next(r for r in rows if r.name == "specreason+decode")
+    print(f"[fig3] SpecReason speedup over base: "
+          f"{base.mean_latency_s / sr.mean_latency_s:.2f}x  "
+          f"accuracy delta: {sr.accuracy - base.accuracy:+.3f}")
+    print(f"[fig3] SpecReason+Decode vs SpecDecode latency: "
+          f"-{100 * (1 - srd.mean_latency_s / sd.mean_latency_s):.1f}%")
+    save_results("fig3_main.json", rows,
+                 {"n_tasks": n_tasks, "k": k_samples,
+                  "threshold": threshold, "budget": budget})
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig 4 — token economy: (a) thinking-token counts per scheme (the
+small model is less verbose; SpecReason inherits that), and (b) the
+accuracy gap between SpecReason and the base model as the thinking-token
+budget tightens."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (SchemeResult, evaluate, make_scheme, save_results,
+                     task_suite)
+
+
+def run(n_tasks: int = 10, k_samples: int = 2, threshold: float = 7.0,
+        budgets=(32, 48, 96)) -> List[SchemeResult]:
+    print(f"[fig4] token budget sweep: budgets={budgets}")
+    suite = task_suite(n_tasks, seed=777)
+    rows = []
+    for b in budgets:
+        for scheme in ("base", "small", "specreason"):
+            r = evaluate(f"{scheme}@{b}",
+                         make_scheme(scheme, threshold=threshold, budget=b),
+                         suite, k_samples)
+            rows.append(r)
+    for b in budgets:
+        base = next(r for r in rows if r.name == f"base@{b}")
+        sr = next(r for r in rows if r.name == f"specreason@{b}")
+        print(f"[fig4] budget={b}: accuracy gap (SR - base) = "
+              f"{sr.accuracy - base.accuracy:+.3f}; token ratio "
+              f"base/SR = {base.mean_thinking_tokens / max(sr.mean_thinking_tokens, 1):.2f}x")
+    save_results("fig4_token_budget.json", rows,
+                 {"budgets": list(budgets), "threshold": threshold})
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Fig 5 — the acceptance-threshold knob: sweeping tau trades
+latency for accuracy (the paper's main control surface), for both
+SpecReason and SpecReason+Decode."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (SchemeResult, evaluate, make_scheme, save_results,
+                     task_suite)
+
+
+def run(n_tasks: int = 10, k_samples: int = 2,
+        thresholds=(3.0, 5.0, 7.0, 9.0)) -> List[SchemeResult]:
+    print(f"[fig5] threshold sweep: tau in {thresholds}")
+    suite = task_suite(n_tasks, seed=4242)
+    rows = []
+    for tau in thresholds:
+        for scheme in ("specreason", "specreason+decode"):
+            rows.append(evaluate(f"{scheme}@tau{tau:g}",
+                                 make_scheme(scheme, threshold=tau),
+                                 suite, k_samples))
+    save_results("fig5_threshold.json", rows, {"thresholds": list(thresholds)})
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Fig 6 — the first-n knob: forcing the first n reasoning steps onto
+the base model steers the trajectory at a small latency cost."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (SchemeResult, evaluate, make_scheme, save_results,
+                     task_suite)
+
+
+def run(n_tasks: int = 10, k_samples: int = 2,
+        first_ns=(0, 1, 2, 4), threshold: float = 5.0) -> List[SchemeResult]:
+    print(f"[fig6] first-n sweep: n in {first_ns} (tau={threshold})")
+    suite = task_suite(n_tasks, seed=91)
+    rows = [evaluate(f"specreason@first{n}",
+                     make_scheme("specreason", threshold=threshold,
+                                 first_n=n),
+                     suite, k_samples) for n in first_ns]
+    save_results("fig6_first_n.json", rows,
+                 {"first_ns": list(first_ns), "threshold": threshold})
+    return rows

@@ -1,0 +1,70 @@
+"""Beyond-paper ablations (no paper analog):
+
+  a) verification policy: trained digit-score readout (the paper's
+     mechanism) vs logprob margin (its proposed variant) vs dynamic
+     threshold, at matched configs;
+  b) overlapped speculation: pipelined small-model drafting — reports the
+     measured overlap-eligible time and the resulting critical-path
+     latency (the latency a two-stream TPU deployment would see).
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+import jax
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import (DynamicThreshold, LogprobMargin,
+                                 StaticThreshold)
+from repro.data import tasks
+from repro.data.evaluate import is_correct
+from repro.sampling.sample import SamplingParams
+
+from .common import DEFAULT_TEMP, engines, evaluate, make_scheme, \
+    save_results, task_suite
+
+
+def run(n_tasks: int = 8, k_samples: int = 2, budget: int = 120):
+    base, small = engines()
+    suite = task_suite(n_tasks)  # same suite as fig3 for comparability
+    sp = SamplingParams(temperature=DEFAULT_TEMP)
+
+    # --- a) policy ablation -------------------------------------------------
+    print("[fig8a] verification-policy ablation")
+    policies = {
+        "digit-score(tau6)": StaticThreshold(6.0),
+        "logprob(tau6.5)": LogprobMargin(threshold=6.5),
+        "dynamic(target0.6)": DynamicThreshold(target_accept=0.6,
+                                               threshold=6.5),
+    }
+    rows = []
+    for name, pol in policies.items():
+        rows.append(evaluate(
+            f"specreason|{name}",
+            make_scheme("specreason", policy=pol, budget=budget),
+            suite, k_samples))
+
+    # --- b) overlapped speculation ------------------------------------------
+    print("[fig8b] overlapped speculation")
+    for overlapped in (False, True):
+        wall, crit, acc = [], [], []
+        for ti, task in enumerate(suite):
+            for s in range(k_samples):
+                key = jax.random.PRNGKey(31337 + ti * 17 + s)
+                cfg = SpecReasonConfig(policy=LogprobMargin(threshold=6.5),
+                                       token_budget=budget, sampling=sp,
+                                       overlapped=overlapped)
+                res = SpecReason(base, small, cfg).run(
+                    tasks.question_tokens(task), key)
+                wall.append(res.wall_time)
+                crit.append(res.critical_path_s)
+                acc.append(is_correct(task, res.answer_ids))
+        print(f"  overlapped={overlapped}: wall={statistics.mean(wall):.2f}s"
+              f" critical-path={statistics.mean(crit):.2f}s"
+              f" acc={statistics.mean(acc):.3f}")
+
+    save_results("fig8_ablations.json", rows,
+                 {"budget": budget, "n": n_tasks, "k": k_samples})
+    return rows

@@ -1,0 +1,53 @@
+"""Roofline table — renders the dry-run JSONL records (all 40 arch x shape
+pairs) into the EXPERIMENTS.md §Roofline table: three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio, per-device memory."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+
+def load(path: str = "exp/dryrun_single.jsonl") -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"], r["param_mode"],
+                  r.get("shard_cache_seq", False))] = r
+    return list(recs.values())
+
+
+def fmt_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | fn | compute ms | memory ms | coll ms | "
+           "dominant | useful | mem/dev GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        ma = r.get("memory_analysis", {})
+        peak = (ma.get("peak_bytes") or 0) + 0
+        args = (ma.get("argument_bytes") or 0)
+        temp = (ma.get("temp_bytes") or 0)
+        dev_gib = (args + temp) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['fn']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_ratio']*100:.0f}% | {dev_gib:.2f} |")
+    return hdr + "\n".join(rows)
+
+
+def run(path: str = None) -> str:
+    if path is None:
+        # prefer the post-§Perf optimized sweep when available
+        path = ("exp/dryrun_single_optimized.jsonl"
+                if os.path.exists("exp/dryrun_single_optimized.jsonl")
+                else "exp/dryrun_single.jsonl")
+    recs = load(path)
+    print(f"[roofline] {len(recs)} dry-run records from {path}")
+    table = fmt_table(recs)
+    print(table)
+    return table

@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per scheme/config) plus
+the roofline table from the dry-run records.
+
+  PYTHONPATH=src python -m benchmarks.run                # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig3
+  PYTHONPATH=src python -m benchmarks.run --quick        # tiny suites
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=("fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+                             "roofline"))
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny suites (CI smoke)")
+    args = ap.parse_args(argv)
+
+    from . import (fig3_main, fig4_token_budget, fig5_threshold, fig6_first_n,
+                   fig7_judge, fig8_ablations, roofline_table)
+
+    n = 3 if args.quick else 10
+    k = 1 if args.quick else 2
+    csv_rows = ["name,us_per_call,derived"]
+
+    def want(x):
+        return args.only in (None, x)
+
+    if want("fig3"):
+        for r in fig3_main.run(n_tasks=n, k_samples=k):
+            csv_rows.append(r.csv_row())
+    if want("fig4"):
+        for r in fig4_token_budget.run(n_tasks=max(n - 2, 2), k_samples=k):
+            csv_rows.append(r.csv_row())
+    if want("fig5"):
+        for r in fig5_threshold.run(n_tasks=max(n - 2, 2), k_samples=k):
+            csv_rows.append(r.csv_row())
+    if want("fig6"):
+        for r in fig6_first_n.run(n_tasks=max(n - 2, 2), k_samples=k):
+            csv_rows.append(r.csv_row())
+    if want("fig7"):
+        out = fig7_judge.run(n_samples=24 if args.quick else 120)
+        csv_rows.append(
+            f"fig7_judge,0,pearson={out['pearson_utility']:.3f}")
+    if want("fig8"):
+        for r in fig8_ablations.run(n_tasks=max(n - 2, 2), k_samples=k):
+            csv_rows.append(r.csv_row())
+    if want("roofline"):
+        roofline_table.run()
+
+    print("\n".join(csv_rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: build a tiny LRM pair, run one SpecReason request, inspect
+the step-level trace.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import random
+
+import jax
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.data.evaluate import extract_answer
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.serving.engine import Engine
+from repro.tokenizer import toy as tk
+
+
+def main():
+    # 1) two models: a base LRM and a small speculator (untrained here —
+    #    run examples/train_toy_lrm.py for the real pair)
+    base_cfg = ModelConfig(name="qs-base", family="dense", n_layers=4,
+                           d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+                           d_ff=512, vocab_size=tk.VOCAB_SIZE)
+    small_cfg = ModelConfig(name="qs-small", family="dense", n_layers=2,
+                            d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                            d_ff=256, vocab_size=tk.VOCAB_SIZE)
+    base = Engine(Model(base_cfg),
+                  Model(base_cfg).init(jax.random.PRNGKey(0)), max_len=512,
+                  name="base")
+    small = Engine(Model(small_cfg),
+                   Model(small_cfg).init(jax.random.PRNGKey(1)), max_len=512,
+                   name="small")
+
+    # 2) a reasoning task
+    task = tasks.sample_task(random.Random(0))
+    prompt = tasks.question_tokens(task)
+    print("question:", tk.detok(prompt))
+    print("ground truth:", task.answer)
+
+    # 3) SpecReason: small model speculates steps, base verifies
+    cfg = SpecReasonConfig(policy=StaticThreshold(7.0), token_budget=96,
+                           max_steps=8)
+    result = SpecReason(base, small, cfg).run(prompt, jax.random.PRNGKey(42))
+
+    # 4) inspect the trace
+    print(f"\n{len(result.steps)} steps "
+          f"({result.accept_rate:.0%} of speculations accepted), "
+          f"{result.n_thinking_tokens} thinking tokens, "
+          f"{result.wall_time:.2f}s")
+    for i, s in enumerate(result.steps):
+        flag = "ACCEPT" if s.accepted else "reject"
+        print(f"  step {i}: [{s.source:5s}] util={s.utility:.1f} {flag}  "
+              f"{tk.detok(s.tokens)[:60]}")
+    print("answer tokens:", tk.detok(result.answer_ids))
+    print("extracted answer:", extract_answer(result.answer_ids))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end serving driver (the paper's kind of workload): batch of
+reasoning requests served with SpecReason on the TRAINED testbed pair,
+comparing all five schemes from the paper's Fig 3.
+
+  PYTHONPATH=src python examples/serve_specreason.py -n 6
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--scheme", "all",
+                *sys.argv[1:]] if "--scheme" not in sys.argv else sys.argv
+    main()

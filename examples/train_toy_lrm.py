@@ -1,0 +1,25 @@
+"""Train the toy testbed LRM pair end-to-end (the models all benchmarks
+measure): the base model learns verbose CoTs + utility scoring, the small
+model compact CoTs.  Checkpoints land in exp/ckpt/.
+
+  PYTHONPATH=src python examples/train_toy_lrm.py --steps 500
+"""
+
+import argparse
+
+from repro.launch.train import train_testbed_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--small-steps", type=int, default=400)
+    ap.add_argument("--ckpt-dir", default="exp/ckpt")
+    args = ap.parse_args()
+    train_testbed_model("base", args.steps, args.ckpt_dir)
+    train_testbed_model("small", args.small_steps, args.ckpt_dir)
+    print("done; run examples/serve_specreason.py next")
+
+
+if __name__ == "__main__":
+    main()

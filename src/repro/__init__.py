@@ -1,0 +1,14 @@
+"""SpecReason-JAX: speculative reasoning for LRM inference (Pan et al.,
+2025), built as a multi-pod JAX serving/training framework.
+
+Subpackages:
+  core       the paper's contribution: step speculation + verification
+  models     6-family model substrate (dense/moe/ssm/hybrid/encdec/vlm)
+  kernels    Pallas TPU kernels (+ jnp oracles)
+  serving    engines, KV manager, scheduler
+  data/tokenizer  synthetic CoT testbed with step-quality oracle
+  training   pure-JAX AdamW/loss/train loop
+  configs    the 10 assigned architectures + testbed pair
+  launch     mesh, multi-pod dryrun, train/serve CLIs
+  roofline   HLO cost parsing + 3-term roofline analysis
+"""

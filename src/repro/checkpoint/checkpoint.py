@@ -1,0 +1,59 @@
+"""Flat-npz pytree checkpointing (save/restore round-trips exactly).
+
+Keys are '/'-joined pytree paths; metadata rides along as JSON.  Enough for
+the toy testbed and structured the way a real orbax-style checkpointer
+would be swapped in."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params: Pytree,
+                    meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez_compressed(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of ``like`` (e.g. model.abstract())."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten_paths(like)
+    leaves = []
+    for key in flat_like:
+        if key not in data:
+            raise KeyError(f"checkpoint {path} missing param {key}")
+        leaves.append(jax.numpy.asarray(data[key]))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _flatten_paths(tree: Pytree):
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def load_meta(path: str) -> Dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

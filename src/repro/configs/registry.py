@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+All ten assigned architectures (public-literature pool) plus the runnable
+toy testbed pair.  ``reduced(arch)`` gives the smoke-test variant of the
+same family (<=2 layers, d_model<=512, <=4 experts)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+from . import (granite_moe_1b, hymba_1_5b, llama_3_2_vision_11b, mamba2_1_3b,
+               minitron_4b, phi3_mini_3_8b, qwen3_moe_235b, starcoder2_7b,
+               testbed, whisper_base, yi_34b)
+
+ARCHS: Dict[str, ModelConfig] = {
+    "mamba2-1.3b": mamba2_1_3b.CONFIG,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b.CONFIG,
+    "minitron-4b": minitron_4b.CONFIG,
+    "phi3-mini-3.8b": phi3_mini_3_8b.CONFIG,
+    "granite-moe-1b-a400m": granite_moe_1b.CONFIG,
+    "whisper-base": whisper_base.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "starcoder2-7b": starcoder2_7b.CONFIG,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b.CONFIG,
+    "yi-34b": yi_34b.CONFIG,
+    # runnable toy testbed (the SpecReason paper experiments)
+    "testbed-base": testbed.BASE,
+    "testbed-small": testbed.SMALL,
+}
+
+ASSIGNED: List[str] = [k for k in ARCHS if not k.startswith("testbed")]
+
+
+def get(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def reduced(arch: str, **overrides) -> ModelConfig:
+    return get(arch).reduced(**overrides)

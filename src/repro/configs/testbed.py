@@ -1,0 +1,32 @@
+"""Toy testbed model pair for the runnable SpecReason experiments.
+
+The *mechanism-scale* analog of the paper's (QwQ-32B, R1-1.5B) pair: the
+base model is ~8x the small model's per-token FLOPs, trained longer and on
+score supervision (so it can act as the verifier); the small model trains
+on the compact CoT style only (it is genuinely less verbose, reproducing
+the paper's Fig 4a effect)."""
+
+from ..models.config import ModelConfig
+from ..tokenizer import toy as tk
+
+BASE = ModelConfig(
+    name="testbed-base",
+    family="dense",
+    n_layers=5,
+    d_model=224,
+    n_heads=8, n_kv_heads=4, head_dim=28,
+    d_ff=896,
+    vocab_size=tk.VOCAB_SIZE,
+    max_position_embeddings=2048,
+).validate()
+
+SMALL = ModelConfig(
+    name="testbed-small",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=512,
+    vocab_size=tk.VOCAB_SIZE,
+    max_position_embeddings=2048,
+).validate()

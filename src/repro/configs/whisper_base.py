@@ -1,0 +1,25 @@
+"""whisper-base — encoder-decoder, conv frontend stubbed [arXiv:2212.04356].
+
+6L (decoder) + 6L (encoder) d_model=512 8H d_ff=2048 vocab=51865.
+The mel-spectrogram + conv feature extractor is a stub per the DESIGN.md
+carve-out: input_specs supplies precomputed frame embeddings (B, 1500, d).
+Deviation noted in DESIGN.md: sinusoidal positions for both encoder and
+decoder (the HF card uses learned decoder positions)."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    citation="arXiv:2212.04356",
+    n_layers=6,
+    n_encoder_layers=6,
+    d_model=512,
+    n_heads=8, n_kv_heads=8, head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    norm_type="layernorm",
+    act="gelu",
+    use_rope=False,
+    encoder_seq_len=1500,
+).validate()

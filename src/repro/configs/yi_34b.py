@@ -1,0 +1,17 @@
+"""yi-34b — llama-arch GQA [arXiv:2403.04652].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    citation="arXiv:2403.04652",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5000000.0,
+).validate()

@@ -1,0 +1,9 @@
+"""SpecReason core: the paper's primary contribution.
+
+segmenter   reasoning-step boundary detection
+verifier    prefill-only single-token utility scoring
+policies    static threshold (paper) + logprob/dynamic (beyond-paper)
+spec_decode token-level speculative decoding (exact)
+controller  speculate -> verify -> accept / fallback loop (+ knobs)
+baselines   vanilla / SpecDecode reference schemes
+"""

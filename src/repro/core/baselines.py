@@ -1,0 +1,86 @@
+"""Baselines the paper compares against (§5.1):
+
+  * vanilla inference with the base model (accuracy reference)
+  * vanilla inference with the small model (latency reference)
+  * token-level speculative decoding (small drafts, base verifies)
+
+All return the same result shape as the SpecReason controller so the
+benchmark harness treats every scheme uniformly."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Sequence
+
+import jax
+
+from ..sampling.sample import SamplingParams
+from ..serving.engine import Engine, Session
+from ..tokenizer import toy as tk
+from .controller import SpecReasonResult, StepRecord
+from .spec_decode import SpecDecodeStats, spec_decode
+
+
+def _finish(thinking: List[int], answer: List[int], t0: float, meters,
+            spec_stats=None, source: str = "base") -> SpecReasonResult:
+    return SpecReasonResult(
+        thinking_ids=thinking, answer_ids=answer,
+        steps=[StepRecord(source, 9.0, True, thinking)],
+        wall_time=time.perf_counter() - t0,
+        spec_stats=spec_stats or SpecDecodeStats(), meters=meters)
+
+
+def vanilla_reason(engine: Engine, prompt_ids: Sequence[int], key: jax.Array,
+                   token_budget: int = 256,
+                   sampling: SamplingParams = SamplingParams(temperature=0.6),
+                   answer_max_tokens: int = 8) -> SpecReasonResult:
+    """Plain autoregressive LRM inference (base-model or small-model)."""
+    engine.meter.reset()
+    t0 = time.perf_counter()
+    sess = engine.extend(engine.new_session(), list(prompt_ids))
+    key, k1 = jax.random.split(key)
+    thinking, sess, _ = engine.generate(sess, token_budget, [tk.THINK_END,
+                                                             tk.EOS],
+                                        sampling, k1)
+    if not thinking or thinking[-1] != tk.THINK_END:
+        sess = engine.extend(sess, [tk.THINK_END])
+        thinking = thinking + [tk.THINK_END]
+    key, k2 = jax.random.split(key)
+    answer, sess, _ = engine.generate(sess, answer_max_tokens, [tk.EOS],
+                                      sampling, k2)
+    return _finish(thinking, answer, t0,
+                   {engine.name or "engine": engine.meter.as_dict()},
+                   source=engine.name or "base")
+
+
+def spec_decode_reason(base: Engine, small: Engine,
+                       prompt_ids: Sequence[int], key: jax.Array,
+                       token_budget: int = 256,
+                       sampling: SamplingParams = SamplingParams(
+                           temperature=0.6),
+                       gamma: int = 4,
+                       answer_max_tokens: int = 8) -> SpecReasonResult:
+    """Pure token-level speculative decoding over the whole generation —
+    the paper's "SpecDecode" baseline (exact w.r.t. the base model)."""
+    base.meter.reset()
+    small.meter.reset()
+    t0 = time.perf_counter()
+    stats = SpecDecodeStats()
+    b = base.extend(base.new_session(), list(prompt_ids))
+    s = small.extend(small.new_session(), list(prompt_ids))
+    key, k1 = jax.random.split(key)
+    thinking, b, s = spec_decode(base, small, b, s, token_budget,
+                                 [tk.THINK_END, tk.EOS], sampling, k1,
+                                 gamma=gamma, stats=stats)
+    if not thinking or thinking[-1] != tk.THINK_END:
+        b = base.extend(b, [tk.THINK_END])
+        s = small.extend(s, [tk.THINK_END])
+        thinking = thinking + [tk.THINK_END]
+    key, k2 = jax.random.split(key)
+    answer, b, s = spec_decode(base, small, b, s, answer_max_tokens,
+                               [tk.EOS], sampling, k2, gamma=gamma,
+                               stats=stats)
+    return _finish(thinking, answer, t0,
+                   {"base": base.meter.as_dict(),
+                    "small": small.meter.as_dict()}, stats)

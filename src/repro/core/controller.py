@@ -1,0 +1,253 @@
+"""The SpecReason controller — the paper's core contribution (§4.1, §4.2).
+
+Per reasoning step:
+  1. the small model *speculates* the next step (decode until <step> /
+     </think> / cap),
+  2. the base model *verifies* it with a prefill-only utility-score pass,
+  3. accept (keep the step in both contexts) or reject (roll the base back
+     and let it regenerate the step — optionally itself accelerated by
+     token-level speculative decoding = SpecReason+Decode, §4.2).
+
+Knobs (paper §4.1): acceptance policy/threshold, first-n base-model steps,
+thinking-token budget.  All state rollback is family-agnostic
+(snapshot/replay), so the controller runs unchanged on dense, MoE, SSM,
+hybrid, VLM and enc-dec backbones (DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple  # noqa: F401
+
+import jax
+import numpy as np
+
+from ..sampling.sample import SamplingParams
+from ..serving.engine import Engine, Session
+from ..tokenizer import toy as tk
+from .policies import AcceptancePolicy, LogprobMargin, StaticThreshold
+from .segmenter import SegmenterConfig, StepSegmenter
+from .spec_decode import SpecDecodeStats, spec_decode
+from .verifier import Verifier
+
+
+@dataclasses.dataclass
+class SpecReasonConfig:
+    # acceptance
+    policy: AcceptancePolicy = dataclasses.field(
+        default_factory=StaticThreshold)
+    # force the first n steps onto the base model (paper Fig 6)
+    first_n_base: int = 0
+    # thinking-token budget (paper: 8192; testbed-scaled)
+    token_budget: int = 256
+    max_steps: int = 24
+    # hierarchical speculation: token-level spec decode inside base
+    # regeneration + the final answer (SpecReason+Decode, §4.2)
+    use_spec_decode: bool = False
+    spec_gamma: int = 4
+    # Overlapped speculation (the paper's §4.1 "pipelining" future work):
+    # after step k is drafted, the small model immediately drafts step k+1
+    # from its own context — on two-stream hardware this runs concurrently
+    # with the base model's verification of step k, removing accepted-step
+    # drafting from the critical path.  The sequential runtime measures the
+    # overlap-eligible seconds (SpecReasonResult.overlapped_s) so the
+    # benches can report pipelined critical-path latency.
+    overlapped: bool = False
+    # sampling
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=lambda: SamplingParams(temperature=0.6))
+    answer_max_tokens: int = 8
+    segmenter: SegmenterConfig = dataclasses.field(
+        default_factory=SegmenterConfig)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    source: str                 # "small" | "base"
+    utility: float
+    accepted: bool
+    tokens: List[int]
+
+
+@dataclasses.dataclass
+class SpecReasonResult:
+    thinking_ids: List[int]
+    answer_ids: List[int]
+    steps: List[StepRecord]
+    wall_time: float
+    spec_stats: SpecDecodeStats
+    meters: Dict[str, Dict[str, float]]
+    # seconds of small-model drafting that would run concurrently with
+    # base-model verification on two-stream hardware (overlapped mode)
+    overlapped_s: float = 0.0
+
+    @property
+    def critical_path_s(self) -> float:
+        return max(self.wall_time - self.overlapped_s, 0.0)
+
+    @property
+    def n_thinking_tokens(self) -> int:
+        return len(self.thinking_ids)
+
+    @property
+    def accept_rate(self) -> float:
+        judged = [s for s in self.steps if s.source == "small"]
+        if not judged:
+            return 0.0
+        return sum(s.accepted for s in judged) / len(judged)
+
+    @property
+    def small_step_frac(self) -> float:
+        if not self.steps:
+            return 0.0
+        return (sum(1 for s in self.steps if s.source == "small"
+                    and s.accepted) / len(self.steps))
+
+
+class SpecReason:
+    """Drives one request across a (base, small) engine pair."""
+
+    def __init__(self, base: Engine, small: Engine,
+                 cfg: Optional[SpecReasonConfig] = None):
+        self.base = base
+        self.small = small
+        self.cfg = cfg or SpecReasonConfig()
+        self.segmenter = StepSegmenter(self.cfg.segmenter)
+        self.verifier = Verifier(base)
+
+    # ------------------------------------------------------------------ run
+    def run(self, prompt_ids: Sequence[int], key: jax.Array
+            ) -> SpecReasonResult:
+        cfg = self.cfg
+        self.base.meter.reset()
+        self.small.meter.reset()
+        t0 = time.perf_counter()
+
+        base_sess = self.base.extend(self.base.new_session(), list(prompt_ids))
+        small_sess = self.small.extend(self.small.new_session(),
+                                       list(prompt_ids))
+
+        thinking: List[int] = []
+        steps: List[StepRecord] = []
+        spec_stats = SpecDecodeStats()
+        done = False
+        overlapped_s = 0.0
+        # overlapped mode: the small model's pre-drafted next step
+        pending: Optional[Tuple[List[int], "object"]] = None
+
+        for step_idx in range(cfg.max_steps):
+            if done or len(thinking) >= cfg.token_budget:
+                break
+            budget_left = cfg.token_budget - len(thinking)
+            max_step = min(self.segmenter.cfg.max_step_tokens, budget_left)
+
+            use_small = step_idx >= cfg.first_n_base
+            if use_small:
+                key, k1 = jax.random.split(key)
+                s_snap = small_sess.snapshot()
+                b_snap = base_sess.snapshot()
+                if pending is not None:
+                    # pre-drafted during the previous step's verification
+                    ids, small_after = pending
+                    pending = None
+                    small_sess = small_after
+                else:
+                    ids, small_sess, _ = self.small.generate(
+                        small_sess, max_step, self.segmenter.stop_ids,
+                        cfg.sampling, k1)
+                end = self.segmenter.classify_end(ids)
+                body = self.segmenter.body(ids)
+
+                if cfg.overlapped and end == "step":
+                    # draft step k+1 now — on two-stream hardware this runs
+                    # concurrently with the base verification below
+                    key, k1b = jax.random.split(key)
+                    t_ov = time.perf_counter()
+                    nids, nsess, _ = self.small.generate(
+                        small_sess, self.segmenter.cfg.max_step_tokens,
+                        self.segmenter.stop_ids, cfg.sampling, k1b)
+                    overlapped_s += time.perf_counter() - t_ov
+                    pending = (nids, nsess)
+
+                if body and end in ("step", "final"):
+                    delim = tk.STEP if end == "step" else tk.THINK_END
+                    vr = self.verifier.verify(base_sess, body, delim)
+                    utility = vr.utility
+                    if isinstance(cfg.policy, LogprobMargin):
+                        utility = cfg.policy.utility_from_logprob(
+                            vr.mean_logprob)
+                    verdict = cfg.policy.judge(utility)
+                    cfg.policy.observe(verdict)
+                    if verdict.accept:
+                        # close the accepted step with its delimiter (the
+                        # verifier's session stops after the body)
+                        base_sess = self.base.extend(vr.session_after_step,
+                                                     [delim])
+                        thinking += body + [delim]
+                        steps.append(StepRecord("small", utility, True,
+                                                body))
+                        if end == "final":
+                            done = True
+                        continue
+                    # rejected: restore both models to the step boundary
+                    # (a pre-drafted next step built on the rejected one is
+                    # dropped with it)
+                    small_sess = s_snap
+                    base_sess = b_snap
+                    pending = None
+                    steps.append(StepRecord("small", utility, False, body))
+                else:
+                    # malformed speculation (runaway / eos): treat as reject
+                    small_sess = s_snap
+                    base_sess = b_snap
+                    pending = None
+                    steps.append(StepRecord("small", 0.0, False, body))
+
+            # base model produces this step (fallback or first-n)
+            key, k2 = jax.random.split(key)
+            if cfg.use_spec_decode:
+                ids, base_sess, small_sess = spec_decode(
+                    self.base, self.small, base_sess, small_sess,
+                    max_step, self.segmenter.stop_ids, cfg.sampling, k2,
+                    gamma=cfg.spec_gamma, stats=spec_stats)
+            else:
+                ids, base_sess, _ = self.base.generate(
+                    base_sess, max_step, self.segmenter.stop_ids,
+                    cfg.sampling, k2)
+                # keep the small model's context in sync
+                small_sess = self.small.extend(small_sess, ids)
+            end = self.segmenter.classify_end(ids)
+            thinking += ids
+            pending = None   # base regeneration invalidates any pre-draft
+            steps.append(StepRecord("base", 9.0, True,
+                                    self.segmenter.body(ids)))
+            if end in ("final", "eos"):
+                done = True
+
+        if not done:
+            # budget exhausted: close the thinking phase like Dynasor-style
+            # budget deadlines do, so the answer is still produced.
+            close = [tk.THINK_END]
+            base_sess = self.base.extend(base_sess, close)
+            small_sess = self.small.extend(small_sess, close)
+            thinking += close
+
+        # final answer: always the base model (paper §3 — only post-think
+        # tokens determine the final output)
+        key, k3 = jax.random.split(key)
+        if cfg.use_spec_decode:
+            answer_ids, base_sess, small_sess = spec_decode(
+                self.base, self.small, base_sess, small_sess,
+                cfg.answer_max_tokens, [tk.EOS], cfg.sampling, k3,
+                gamma=cfg.spec_gamma, stats=spec_stats)
+        else:
+            answer_ids, base_sess, _ = self.base.generate(
+                base_sess, cfg.answer_max_tokens, [tk.EOS], cfg.sampling, k3)
+
+        wall = time.perf_counter() - t0
+        return SpecReasonResult(
+            thinking_ids=thinking, answer_ids=answer_ids, steps=steps,
+            wall_time=wall, spec_stats=spec_stats,
+            meters={"base": self.base.meter.as_dict(),
+                    "small": self.small.meter.as_dict()},
+            overlapped_s=overlapped_s)

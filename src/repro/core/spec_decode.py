@@ -1,0 +1,157 @@
+"""Token-level speculative decoding (Leviathan et al., 2023) — the *exact*
+acceleration SpecReason composes with hierarchically (§4.2).
+
+The draft (small) model proposes ``gamma`` tokens; the base model verifies
+them with ONE chunked-prefill pass (gamma+1 usable distributions thanks to
+the Session's cached last_logits).  Greedy mode accepts the longest
+argmax-matching prefix; sampled mode runs the standard rejection-sampling
+rule, preserving the base model's output distribution exactly (property-
+tested in tests/test_spec_decode.py).
+
+Both engines' contexts are kept in sync via snapshot/replay rollback, so
+the routine works for any model family (attention, SSM, hybrid)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sampling.sample import (SamplingParams, adjust_logits,
+                               probs_from_logits, sample, sample_from_probs)
+from ..serving.engine import Engine, Session
+
+
+@dataclasses.dataclass
+class SpecDecodeStats:
+    proposed: int = 0
+    accepted: int = 0
+    rounds: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+
+def _base_probs(logits: jax.Array, params: SamplingParams) -> np.ndarray:
+    return np.asarray(probs_from_logits(logits, params), np.float32)
+
+
+def spec_decode(base: Engine, draft: Engine, base_sess: Session,
+                draft_sess: Session, max_tokens: int,
+                stop_ids: Sequence[int], params: SamplingParams,
+                key: jax.Array, gamma: int = 4,
+                stats: Optional[SpecDecodeStats] = None
+                ) -> Tuple[List[int], Session, Session]:
+    """Generate up to ``max_tokens`` tokens of the *base* model's
+    distribution, accelerated by the draft model.
+
+    Both sessions must be positioned at the same context.  Returns
+    (generated ids incl. stop token, base session, draft session)."""
+    stop = set(int(s) for s in stop_ids)
+    out: List[int] = []
+    stats = stats if stats is not None else SpecDecodeStats()
+
+    while len(out) < max_tokens:
+        g = min(gamma, max_tokens - len(out))
+        # 1) draft proposes g tokens (recording its proposal distributions)
+        d_snap = draft_sess.snapshot()
+        draft_ids, draft_sess, draft_probs = draft.generate(
+            draft_sess, g, stop_ids=(), params=params, key=key,
+            collect_probs=True)
+        key, _ = jax.random.split(key)
+        stats.proposed += len(draft_ids)
+        stats.rounds += 1
+
+        # 2) base verifies the whole chunk in one prefill
+        b_snap = base_sess.snapshot()
+        chunk_logits, base_sess_ext = base.extend_logits(base_sess, draft_ids)
+        # distributions: p(d1|ctx) from last_logits, p(d_{i+1}|ctx+d<=i)
+        all_logits = jnp.concatenate([b_snap.last_logits, chunk_logits[:-1]],
+                                     axis=0)
+
+        accepted: List[int] = []
+        replacement: Optional[int] = None
+        for i, tok in enumerate(draft_ids):
+            p_base = _base_probs(all_logits[i], params)
+            if params.temperature <= 0:
+                ok = int(np.argmax(p_base)) == tok
+            else:
+                q = float(draft_probs[i][tok])
+                p = float(p_base[tok])
+                key, sub = jax.random.split(key)
+                ok = float(jax.random.uniform(sub)) < min(1.0, p / max(q,
+                                                                       1e-30))
+            if ok:
+                accepted.append(tok)
+                stats.accepted += 1
+                if tok in stop:
+                    break
+            else:
+                # residual distribution (p - q)_+ normalized
+                if params.temperature <= 0:
+                    replacement = int(np.argmax(p_base))
+                else:
+                    resid = np.maximum(p_base - draft_probs[i], 0.0)
+                    z = resid.sum()
+                    if z <= 1e-12:
+                        resid = p_base
+                        z = resid.sum()
+                    key, sub = jax.random.split(key)
+                    replacement = int(sample_from_probs(
+                        jnp.asarray(resid / z), sub))
+                break
+
+        hit_stop = bool(accepted) and accepted[-1] in stop
+        if len(accepted) == len(draft_ids) and replacement is None \
+                and not hit_stop:
+            # all accepted: bonus token from the base distribution at the end
+            p_bonus = _base_probs(chunk_logits[-1], params)
+            key, sub = jax.random.split(key)
+            replacement = (int(np.argmax(p_bonus))
+                           if params.temperature <= 0
+                           else int(sample_from_probs(jnp.asarray(p_bonus),
+                                                      sub)))
+
+        # 3) reconcile both contexts to: snapshot + accepted (+ replacement)
+        suffix = accepted + ([replacement] if replacement is not None
+                             and not hit_stop else [])
+        out += suffix
+        if replacement is not None and not hit_stop and replacement in stop:
+            hit_stop = True
+
+        if len(accepted) == len(draft_ids) and not hit_stop:
+            # base context already contains the chunk; append replacement
+            base_sess = base.extend(base_sess_ext, [replacement])
+            draft_sess = draft.extend(draft_sess, [replacement])
+        else:
+            # Reject path.  Both caches already hold ``draft_ids`` at the
+            # speculated positions and ``suffix[:-1]`` is a prefix of them,
+            # so attention-cache engines roll back in O(1): truncate to
+            # len(suffix)-1 kept tokens and re-decode ONLY the final suffix
+            # token (which also refreshes last_logits).  No accepted token
+            # is ever recomputed — this is what makes speculation
+            # profitable at wall-clock level (§Perf testbed iteration s1).
+            # SSM engines fall back to snapshot + replay.
+            assert suffix, "reject path always has >= 1 reconcile token"
+            base_sess = _reconcile(base, base_sess_ext, b_snap, suffix)
+            draft_sess = _reconcile(draft, draft_sess, d_snap, suffix)
+
+        if hit_stop:
+            break
+    return out, base_sess, draft_sess
+
+
+def _reconcile(engine: Engine, sess_with_cache: Session, snap: Session,
+               suffix: List[int]) -> Session:
+    """Place ``snap + suffix`` as the engine context, reusing cached
+    speculative KV entries when the engine supports truncation."""
+    if engine.can_truncate:
+        keep = len(suffix) - 1
+        s = engine.truncate(sess_with_cache, snap.pos + keep,
+                            snap.last_logits)   # placeholder; not read
+        return engine.decode_one(s, suffix[-1])
+    return engine.rollback(sess_with_cache, snap, replay=suffix)

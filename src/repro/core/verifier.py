@@ -1,0 +1,91 @@
+"""Base-model verification of speculated reasoning steps.
+
+Faithful to §4.1: the speculated step is appended to the base model's
+context with one *prefill-only* pass, followed by the templated score
+prompt (here the single ``<score>`` token — the toy testbed's analog of the
+paper's ~70-token template); the next-token distribution restricted to the
+digit tokens 0-9 is the utility score.  The same pass's logits also yield
+the step's mean logprob for the beyond-paper LogprobMargin policy — for
+free.
+
+State discipline (the "discard the KV entries" of §4.1):
+  * ``verify`` leaves the base session positioned *after the step body* —
+    i.e. the score-prompt token is never kept in the cache (snapshot taken
+    between the body extend and the score extend).
+  * on rejection the controller rolls the base session back to the
+    pre-step snapshot (family-agnostic snapshot/replay, since SSM states
+    cannot be truncated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..serving.engine import Engine, Session
+from ..tokenizer import toy as tk
+
+
+@dataclasses.dataclass
+class VerifyResult:
+    utility: float              # digit-expectation utility score, 0-9
+    argmax_score: int           # argmax digit (the paper's readout)
+    mean_logprob: float         # base logprob of the step body (free extra)
+    session_after_step: Session # base session incl. step, excl. score prompt
+
+
+class Verifier:
+    def __init__(self, engine: Engine, score_token: int = tk.SCORE,
+                 digit_ids: Optional[List[int]] = None,
+                 readout: str = "expect"):
+        """readout: 'argmax' (paper's single-token readout) or 'expect'
+        (expectation over the digit distribution — slightly smoother)."""
+        self.engine = engine
+        self.score_token = score_token
+        self.digit_ids = digit_ids or tk.DIGIT_IDS
+        self.readout = readout
+
+    def verify(self, base: Session, step_body: List[int],
+               step_delim: Optional[int] = tk.STEP) -> VerifyResult:
+        """Score ``step_body`` as the next reasoning step after ``base``.
+
+        The step body (+ its delimiter, so the context stays well-formed)
+        and the score prompt are prefilled in one engine call each; the
+        returned session excludes the score prompt."""
+        # Score prompt format must match training: <score> follows the step
+        # body DIRECTLY (no <step> in between); the delimiter is appended
+        # only after the utility readout.
+        body = list(step_body)
+        logits_body, after_body = self.engine.extend_logits(base, body)
+
+        # mean base-model logprob of the step body given the prior context
+        # (logits at position i-1 predict token i; base.last_logits covers
+        # the first body token)
+        lps = []
+        if base.last_logits is not None:
+            all_logits = jnp.concatenate(
+                [base.last_logits, logits_body[:-1]], axis=0)
+            logp = jax.nn.log_softmax(all_logits.astype(jnp.float32), axis=-1)
+            idx = jnp.asarray(body, jnp.int32)
+            lps = jnp.take_along_axis(logp, idx[:, None], axis=1)[:, 0]
+            mean_lp = float(jnp.mean(lps))
+        else:
+            mean_lp = 0.0
+
+        # score prompt: one prefill pass, then discard it from the cache
+        score_logits, _ = self.engine.extend_logits(after_body,
+                                                    [self.score_token])
+        digit_logits = score_logits[-1][jnp.asarray(self.digit_ids)]
+        probs = np.asarray(jax.nn.softmax(digit_logits.astype(jnp.float32)))
+        argmax_score = int(np.argmax(probs))
+        expect = float(np.dot(probs, np.arange(10)))
+        utility = expect if self.readout == "expect" else float(argmax_score)
+
+        # The returned session stops after the step BODY; the caller
+        # appends the delimiter only on acceptance (one less engine call on
+        # every rejection).
+        return VerifyResult(utility, argmax_score, mean_lp, after_body)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots SpecReason serving hits:
+
+flash_attention   causal GQA prefill/verification attention
+decode_attention  flash-decode (one token vs long KV cache)
+ssd_scan          Mamba2 SSD chunked scan (fused inter-chunk recurrence)
+
+ops.py holds the jit'd wrappers (interpret-mode on CPU); ref.py the
+pure-jnp oracles the tests sweep against.
+"""

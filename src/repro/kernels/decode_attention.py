@@ -1,0 +1,124 @@
+"""Flash-decode — Pallas TPU kernel for single-token GQA attention.
+
+The dominant per-token cost of LRM decoding (and hence of everything
+SpecReason accelerates) is reading the KV cache: one new query attends over
+the whole context.  This kernel is the TPU adaptation of that hot loop:
+
+  * grid = (batch, kv_heads, kv_blocks); kv_blocks innermost/sequential so
+    the online-softmax accumulator for the whole GQA *group* of query heads
+    lives in VMEM scratch.
+  * All G = H/K query heads of one kv head are processed together as a
+    (G, hd) tile — on TPU this turns a memory-bound matvec into a skinny
+    (G, hd) x (hd, BK) matmul, feeding the MXU G rows at a time and reusing
+    each KV block loaded from HBM G times.
+  * Per-batch context lengths arrive via scalar prefetch (SMEM) so one
+    compiled kernel serves ragged batches (continuous batching); blocks
+    entirely beyond a row's length are skipped (their DMA cost still counts
+    on TPU — the serving layer buckets lengths to limit waste).
+  * Ring-buffer (sliding-window) caches work unchanged: validity is
+    a per-slot predicate on the prefetched lengths, and RoPE was applied at
+    write time with absolute positions.
+
+Validated against ``ref.decode_reference`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_k: int, scale: float):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[ib]
+    k_start = ik * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k_cache/v_cache: (B, K, S, hd); lengths: (B,) int32 —
+    number of valid cache entries per row.  Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    _, kh, s, _ = k_cache.shape
+    assert h % kh == 0
+    group = h // kh
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, kh, group, hd)
+    grid = (b, kh, s // block_k)
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, hd), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,129 @@
+"""Causal GQA flash attention — Pallas TPU kernel (prefill / verification).
+
+This is the compute hot-spot of SpecReason's *verification* passes (chunked
+prefill over the speculated step + ~70-token score prompt) and of prompt
+prefill in general.
+
+TPU mapping (HBM -> VMEM -> MXU):
+  * grid = (batch, q_heads, q_blocks, kv_blocks); the kv dimension is the
+    innermost (sequential) axis so the online-softmax accumulators can live
+    in VMEM scratch across kv iterations.
+  * BlockSpec tiles: q (1,1,BQ,hd), k/v (1,1,BK,hd) with BQ=BK=128 by
+    default — MXU-aligned (128x128 systolic array) and small enough that
+    q/k/v/acc tiles fit comfortably in ~16 MB VMEM even at hd=128.
+  * GQA: the kv-head index for query head h is h // (H // K), applied in the
+    k/v index_maps — no materialized head repetition in HBM.
+  * Causality: whole blocks strictly above the diagonal are skipped with
+    pl.when (no FLOPs, no DMA use), the diagonal block is masked elementwise.
+
+Validated against ``ref.mha_reference`` in interpret mode (CPU) by
+tests/test_kernels.py over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_k: int, seq_len: int,
+                  causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    run = (k_start <= q_start + block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+            kj = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+            s = jnp.where(kj <= qi, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, K, S, hd) with H % K == 0.
+
+    Returns (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kh = k.shape[1]
+    assert h % kh == 0
+    group = h // kh
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / math.sqrt(hd)
+    grid = (b, h, s // block_q, s // block_k)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, seq_len=s, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

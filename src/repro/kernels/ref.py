@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth used by tests/test_kernels.py (interpret-mode
+allclose sweeps over shapes and dtypes) and are intentionally written in
+the most direct way possible — no chunking, no online softmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv_heads(k: jax.Array, group: int) -> jax.Array:
+    """(B, K, S, hd) -> (B, K*group, S, hd)."""
+    return jnp.repeat(k, group, axis=1)
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q: (B,H,S,hd); k,v: (B,K,S,hd).  Direct softmax attention."""
+    b, h, s, hd = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    k = _repeat_kv_heads(k, group)
+    v = _repeat_kv_heads(v, group)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(s)[None, :]
+        scores = jnp.where((kj <= qi)[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """q: (B,H,hd); k_cache/v_cache: (B,K,S,hd); lengths: (B,)."""
+    b, h, hd = q.shape
+    kh, s = k_cache.shape[1], k_cache.shape[2]
+    group = h // kh
+    k = _repeat_kv_heads(k_cache, group)
+    v = _repeat_kv_heads(v_cache, group)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array, init_state: jax.Array):
+    """Sequential (non-chunked) SSD recurrence — the definitional form.
+
+    x: (B,L,H,P); dt: (B,L,H); a: (H,); b,c: (B,L,G,N);
+    init_state: (B,H,P,N).  Returns (y, final_state)."""
+    bsz, l, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt, ct = t
+        decay = jnp.exp(af[None, :] * dtt)                     # (B,H)
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return y, final

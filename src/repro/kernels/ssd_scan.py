@@ -1,0 +1,127 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+The SSD (state-space duality) computation of arXiv:2405.21060 splits the
+sequence into chunks: a quadratic intra-chunk "attention-like" term (MXU
+friendly) plus a linear inter-chunk state recurrence.  This kernel fuses
+both for one (batch, head) pair:
+
+  * grid = (batch, heads, n_chunks); the chunk axis is innermost and
+    *sequential*, so the running SSM state (P, N) lives in VMEM scratch and
+    carries across chunk iterations — the inter-chunk recurrence costs no
+    HBM traffic at all.
+  * BlockSpec tiles per step: x (Q, P), dt (Q,), B/C (Q, N) with the GQA-
+    style group->head broadcast resolved in the index_map (no repeat in
+    HBM).  Q = chunk length (128 default) keeps every matmul MXU-aligned:
+    (Q,N)x(N,Q), (Q,Q)x(Q,P), (N,Q)x(Q,P).
+  * The decay matrix exp(segsum(a*dt)) is built in-register from a cumsum —
+    cheap VPU work overlapped with the MXU matmuls.
+
+Emits both the per-position outputs y (B, L, H, P) and the final state
+(B, H, P, N) — the latter is what SpecReason snapshots at reasoning-step
+boundaries for SSM-family rollback (DESIGN.md §Arch-applicability).
+
+Validated against ``ref.ssd_reference`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+                y_ref, fin_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)                 # ()
+    b = b_ref[0, :, 0].astype(jnp.float32)           # (Q, N)
+    c = c_ref[0, :, 0].astype(jnp.float32)           # (Q, N)
+
+    xd = x * dt[:, None]
+    adt = a * dt                                     # (Q,)
+    cum = jnp.cumsum(adt)                            # (Q,)
+
+    # intra-chunk decay matrix L[i,j] = exp(cum_i - cum_j) for j <= i
+    seg = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(kj <= qi, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * lmat
+    y = jax.lax.dot_general(scores, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # contribution of the state entering this chunk
+    state = state_ref[...]                            # (P, N)
+    c_dec = c * jnp.exp(cum)[:, None]                 # (Q, N)
+    y = y + jax.lax.dot_general(c_dec, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: state' = state * exp(sum a dt) + sum_j decay_j * x_j b_j^T
+    decay_states = jnp.exp(cum[-1] - cum)             # (Q,)
+    xb = jax.lax.dot_general(xd * decay_states[:, None], b,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = state * jnp.exp(cum[-1]) + xb
+
+    @pl.when(ic == nc - 1)
+    def _emit():
+        fin_ref[0, 0] = state_ref[...].astype(fin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, chunk: int, init_state: jax.Array,
+             interpret: bool = False):
+    """x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, G, N);
+    init_state: (B, H, P, N).  L must be a multiple of ``chunk``.
+
+    Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda ib, ih, ic, r=rep: (ib, ic, ih // r, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda ib, ih, ic, r=rep: (ib, ic, ih // r, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, init_state.astype(jnp.float32))
+    return y, fin

@@ -1,0 +1,258 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Implements the chunked SSD algorithm for training/prefill (quadratic
+intra-chunk term + linear inter-chunk state recurrence) and the O(1)
+recurrent update for decode.  The intra-chunk einsums are the compute
+hot-spot and have a Pallas kernel (``repro.kernels.ssd_scan``); this module
+is the XLA-native path and the oracle's substrate.
+
+Shapes (following the paper's minimal implementation):
+  x  : (B, L, H, P)   inner activations, H = d_inner/P heads
+  dt : (B, L, H)      softplus(dt + bias) per head
+  A  : (H,)           negative decay rate (A = -exp(A_log))
+  B,C: (B, L, G, N)   input/output projections, G groups broadcast to H
+State: (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ParamSpec
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di, n, g = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_groups
+    h, w = cfg.ssm_n_heads, cfg.ssm_conv_width
+    conv_ch = di + 2 * g * n
+    return {
+        "w_in": ParamSpec((d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner"),
+                          "scaled", 1.0, 0),
+        "conv_w": ParamSpec((w, conv_ch), ("conv", "ssm_inner"),
+                            "scaled", 1.0, 0),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), "zeros"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), "arange_log"),
+        "D": ParamSpec((h,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), "uniform_dt"),
+        "norm_scale": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "w_out": ParamSpec((di, d), ("ssm_inner", "embed"), "scaled", 1.0, 0),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di, n, g, h = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_groups,
+                   cfg.ssm_n_heads)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt = zxbcdt[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xbc: (B, L, C); w: (W, C).
+
+    Returns (out (B,L,C), final conv state (B, W-1, C))."""
+    bsz, l, ch = xbc.shape
+    width = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, width - 1, ch), xbc.dtype)
+    padded = jnp.concatenate([init_state.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + padded[:, i:i + l, :] * w[i]
+    new_state = padded[:, l:, :] if width > 1 else init_state
+    return jax.nn.silu(out + b), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: a (..., q) -> (..., q, q) lower-triangular sums
+    S[i, j] = sum(a[j+1..i]) for j < i, 0 on diagonal, -inf above."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,L,H,P), dt: (B,L,H) (already softplus'd), a: (H,) negative,
+    b,c: (B,L,G,N).  Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    # broadcast groups to heads
+    bh = jnp.repeat(b, rep, axis=2)                   # (B,L,H,N)
+    ch_ = jnp.repeat(c, rep, axis=2)
+
+    xd = x * dt[..., None]                            # discretized input
+    ad = a[None, None, :] * dt                        # (B,L,H) log-decay
+
+    def r(t, q):  # reshape L -> (nc, q)
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+
+    xc, adc, bc, cc = r(xd, chunk), r(ad, chunk), r(bh, chunk), r(ch_, chunk)
+    adc = adc.transpose(0, 1, 3, 2)                   # (B,nc,H,Q)
+    a_cum = jnp.cumsum(adc, axis=-1)                  # (B,nc,H,Q)
+
+    # 1) intra-chunk (quadratic in Q)
+    lmat = jnp.exp(_segsum(adc))                      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bzqhn,bzshn->bzhqs", cc, bc) * lmat
+    y_diag = jnp.einsum("bzhqs,bzshp->bzqhp", scores, xc)
+
+    # 2) per-chunk final-state contribution
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)   # (B,nc,H,Q)
+    states = jnp.einsum("bzshn,bzhs,bzshp->bzhpn", bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])             # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                              # emit state *entering* chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        init_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4) chunk-input contribution through entering state
+    state_decay = jnp.exp(a_cum)                       # (B,nc,H,Q)
+    y_off = jnp.einsum("bzqhn,bzhpn,bzhq->bzqhp", cc,
+                       prev_states.astype(cc.dtype),
+                       state_decay.astype(cc.dtype))
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final.astype(x.dtype)
+
+
+def ssd_decode_step(xt: jax.Array, dt: jax.Array, a: jax.Array, bt: jax.Array,
+                    ct: jax.Array, state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent step.  xt: (B,H,P), dt: (B,H), bt/ct: (B,G,N),
+    state: (B,H,P,N)."""
+    h = xt.shape[1]
+    g = bt.shape[1]
+    rep = h // g
+    bh = jnp.repeat(bt, rep, axis=1)                   # (B,H,N)
+    chh = jnp.repeat(ct, rep, axis=1)
+    decay = jnp.exp(a[None, :] * dt)                   # (B,H)
+    upd = jnp.einsum("bhp,bhn->bhpn", xt * dt[..., None], bh)
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, chh)
+    return y, new_state
+
+
+def gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Mamba2 output norm: RMSNorm(y * silu(z)) * scale."""
+    dt_ = y.dtype
+    y = (y * jax.nn.silu(z)).astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt_)
+
+
+def apply_mamba(x: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                return_state: bool = False, use_pallas: bool = False):
+    """Full-sequence mamba2 mixer.  x: (B, L, d).
+
+    state: optional (conv_state (B,W-1,C), ssm_state (B,H,P,N)) to resume
+    from (chunked prefill).  Returns y or (y, new_state)."""
+    bsz, l, d = x.shape
+    di, n, g, h = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_groups,
+                   cfg.ssm_n_heads)
+    pdim = cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["w_in"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    conv_in = None if state is None else state[0]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_in)
+    xs = xbc[..., :di].reshape(bsz, l, h, pdim)
+    b = xbc[..., di:di + g * n].reshape(bsz, l, g, n)
+    c = xbc[..., di + g * n:].reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    # pad L to a multiple of the chunk (masked tokens contribute zero via dt=0)
+    chunk = min(cfg.ssm_chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    init_ssm = None if state is None else state[1]
+    if use_pallas:
+        from ..kernels import ops as kops
+        y, final = kops.ssd(xs, dt, a, b, c, chunk, init_ssm)
+    else:
+        y, final = ssd_chunked(xs, dt, a, b, c, chunk, init_ssm)
+    if pad:
+        y = y[:, :l]
+    y = y + xs[:, :l] * p["D"][None, None, :, None]
+    y = y.reshape(bsz, l, di)
+    y = gated_rmsnorm(y, z, p["norm_scale"], cfg.rmsnorm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["w_out"]).astype(x.dtype)
+    if return_state:
+        return out, (conv_state, final)
+    return out
+
+
+def apply_mamba_decode(x: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig,
+                       state: Tuple[jax.Array, jax.Array]
+                       ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token decode.  x: (B, 1, d); state = (conv_state, ssm_state)."""
+    bsz = x.shape[0]
+    di, n, g, h = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_groups,
+                   cfg.ssm_n_heads)
+    pdim = cfg.ssm_head_dim
+    conv_state, ssm_state = state
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["w_in"])[:, 0]
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    # conv: append new column, take last W taps
+    w = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state.astype(xbc.dtype),
+                              xbc[:, None, :]], axis=1)   # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:, :]
+
+    xt = xbc[..., :di].reshape(bsz, h, pdim)
+    bt = xbc[..., di:di + g * n].reshape(bsz, g, n)
+    ct = xbc[..., di + g * n:].reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, new_ssm = ssd_decode_step(xt.astype(jnp.float32),
+                                 dt.astype(jnp.float32), a,
+                                 bt.astype(jnp.float32),
+                                 ct.astype(jnp.float32),
+                                 ssm_state.astype(jnp.float32))
+    y = y.astype(x.dtype) + xt * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, di)
+    y = gated_rmsnorm(y, z[:, None, :], p["norm_scale"], cfg.rmsnorm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["w_out"]).astype(x.dtype)
+    return out, (new_conv_state, new_ssm.astype(ssm_state.dtype))

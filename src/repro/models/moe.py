@@ -1,0 +1,119 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded GShard-style dispatch.
+
+TPU-native formulation (GShard / Switch / GLaM lineage): tokens are split
+into *groups* (the data-parallel shards), each group dispatches into
+per-expert capacity buffers through one-hot einsums, experts run as one
+batched (E, C, d) x (E, d, ff) einsum, and results are combined back.  With
+experts sharded over the "model" mesh axis and groups over "data", XLA SPMD
+emits the expert-parallel all-to-all on the (g, e, c, d) dispatch buffer.
+
+FLOPs scale with top_k (not n_experts); the dispatch/combine einsums add a
+real, documented GShard overhead proportional to E*C — visible in the
+roofline and a target of the perf pass (capacity_factor, group sizing).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ParamSpec
+
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None), "scaled", 1.0, 0),
+        "w_gate": ParamSpec((e, d, ff), ("experts", "embed", "mlp"),
+                            "scaled", 1.0, 1),
+        "w_up": ParamSpec((e, d, ff), ("experts", "embed", "mlp"),
+                          "scaled", 1.0, 1),
+        "w_down": ParamSpec((e, ff, d), ("experts", "mlp", "embed"),
+                            "scaled", 1.0, 1),
+    }
+
+
+def group_capacity(group_size: int, cfg: ModelConfig) -> int:
+    cap = int(cfg.capacity_factor * group_size * cfg.top_k / cfg.n_experts)
+    cap = max(cap, cfg.top_k, 1)
+    return min(cap, group_size * cfg.top_k)
+
+
+def route(logits: jax.Array, cfg: ModelConfig, capacity: int
+          ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Per-group routing.
+
+    logits: (G, S, E).  Returns dispatch (G,S,E,C) one-hot, combine
+    (G,S,E,C) gate-weighted, and aux loss terms.
+    """
+    g, s, e = logits.shape
+    k, c = cfg.top_k, capacity
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                     # (G,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Buffer position of each (token, choice): priority order = choice-major
+    # (all 1st choices first), token order within a choice.
+    oh_e = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)               # (G,S,k,E)
+    flat = oh_e.transpose(0, 2, 1, 3).reshape(g, k * s, e)            # (G,k*S,E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                         # (G,k*S,E)
+    pos = jnp.sum(pos_flat * flat, axis=-1).reshape(g, k, s)
+    pos = pos.transpose(0, 2, 1)                                       # (G,S,k)
+    keep = pos < c
+
+    oh_ef = oh_e.astype(jnp.float32)
+    oh_c = (jax.nn.one_hot(pos, c, dtype=jnp.float32)
+            * keep[..., None].astype(jnp.float32))                     # (G,S,k,C)
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_ef, oh_c)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_ef, oh_c, gate_vals)
+
+    me = jnp.mean(probs, axis=(0, 1))                                  # (E,)
+    ce = jnp.mean(oh_ef[:, :, 0, :], axis=(0, 1))                      # top-1 share
+    aux = {
+        "load_balance": e * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.scipy.special.logsumexp(
+            logits.astype(jnp.float32), axis=-1) ** 2),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return dispatch, combine, aux
+
+
+def apply_moe(x: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (B, S, d), aux losses.
+
+    Tokens are flattened batch-major and split into dispatch groups of
+    ``cfg.moe_group_size`` tokens (GShard group sizing) so the one-hot
+    dispatch/combine tensors stay O(g*E*C) per group regardless of global
+    token count.  Batch-major order keeps the group dim sharded over the
+    data axis when the batch is.
+    """
+    b, s, d = x.shape
+    t = b * s
+    gsize = min(cfg.moe_group_size, t)
+    while t % gsize:
+        gsize //= 2
+    xg = x.reshape(t // gsize, gsize, d)
+    g, sg, _ = xg.shape
+    c = group_capacity(sg, cfg)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"])
+    dispatch, combine, aux = route(logits, cfg, c)
+
+    # (G,S,d) x (G,S,E,C) -> (E, G, C, d): expert-parallel all-to-all here
+    buf = jnp.einsum("gsd,gsec->egcd", xg, dispatch.astype(xg.dtype))
+    gate = jnp.einsum("egcd,edf->egcf", buf, p["w_gate"])
+    up = jnp.einsum("egcd,edf->egcf", buf, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+    y = jnp.einsum("egcd,gsec->gsd", out, combine.astype(out.dtype))
+    return y.reshape(b, s, d), aux
+
+
+def aux_loss(aux: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    return (cfg.router_aux_coef * aux["load_balance"]
+            + cfg.router_z_coef * aux["router_z"])

@@ -1,0 +1,73 @@
+"""Activation-sharding rules as an ambient context.
+
+Model code calls ``constrain(x, ("act_batch", None, "act_heads", None))``
+with *logical* activation axes; the launcher installs a mapping from logical
+axes to mesh axes for the mesh/shape at hand.  Outside any context (CPU
+tests, single device) ``constrain`` is a no-op, keeping the model code
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+# Baseline logical activation axis -> mesh axis rules.
+def default_activation_rules(data_axes=("data",), model_axis="model",
+                             shard_batch: bool = True) -> Dict[str, Any]:
+    batch = tuple(data_axes) if shard_batch else None
+    return {
+        "act_batch": batch,      # batch / token-group dims
+        "act_seq": None,         # sequence (baseline: unsharded)
+        "act_embed": None,       # d_model
+        "act_heads": model_axis, # attention heads
+        "act_kv": model_axis,    # kv heads
+        "act_mlp": model_axis,   # ffn hidden
+        "act_experts": model_axis,
+        "act_vocab": model_axis,
+        "act_ssm": model_axis,   # mamba inner / heads
+        # decode KV-cache sequence dim: "model" in sequence-parallel
+        # flash-decode mode (when kv heads don't divide the model axis),
+        # None otherwise — set per-shape by the launcher.
+        "act_cache_seq": None,
+    }
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Optional[Dict[str, Any]]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_state, "rules", None)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = []
+    used = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        key = tuple(m) if isinstance(m, (list, tuple)) else m
+        if m is not None and key in used:
+            m = None
+        elif m is not None:
+            used.add(key)
+        spec.append(m)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,330 @@
+"""HLO-text cost model with while-loop trip-count accounting.
+
+``compiled.cost_analysis()`` counts each while-loop *body once* (verified in
+tests/test_roofline.py), which silently undercounts every scan-over-layers
+model by ~n_layers and every blockwise-attention/SSD scan by its chunk
+count.  This module parses the optimized (post-SPMD, per-chip) HLO text and
+computes
+
+  * matmul FLOPs from every ``dot`` op (2 * prod(result) * prod(contracted)),
+  * approximate bytes accessed (result + operand bytes per op),
+  * collective bytes by category,
+
+recursively through fusions/calls, multiplying while-loop bodies by their
+trip counts (extracted from the loop-condition constant).  Branches of
+conditionals contribute their max.  Validated against cost_analysis() on
+fully-unrolled programs where the two must agree (tests/test_roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# ops whose operand/result traffic we ignore (pure plumbing)
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "bitcast",
+             "constant", "after-all", "iota", "opt-barrier", "partition-id",
+             "replica-id"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\(")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    """Parse 'bf16[2,3]{...}' or '(f32[4], s32[])' into [(dtype, dims)]."""
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * math.prod(dims or [1])
+               for dt, dims in _shape_list(type_str))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0      # op-level sum (counts fusion intermediates)
+    bytes_io: float = 0.0   # kernel(fusion)-level IO — closer to HBM traffic
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in COLLECTIVE_OPS}
+
+    def __iadd__(self, o: "Cost") -> "Cost":
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.bytes_io += o.bytes_io
+        for k in COLLECTIVE_OPS:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.bytes_io * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _split_operands(line: str) -> List[str]:
+    """Names inside the first top-level parens group of an op line."""
+    start = line.index("(")
+    depth = 0
+    out, cur = [], []
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append("".join(cur).strip())
+                break
+        if depth >= 1:
+            if ch == "," and depth == 1:
+                out.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+    names = []
+    for tok in out:
+        m = re.search(r"%([\w.\-]+)", tok)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.shapes: Dict[str, str] = {}        # op name -> type str
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        comment = re.compile(r"/\*.*?\*/")
+        for line in text.splitlines():
+            # XLA annotates long tuple types with /*index=N*/ comments whose
+            # '=' breaks the op-line regex — strip them first.
+            if "/*" in line:
+                line = comment.sub("", line)
+            h = _COMP_HEADER_RE.match(line)
+            if h and ("->" in line):
+                cur = h.group(1)
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                self.computations[cur] = []
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_LINE_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            op = Op(name, type_str, opcode,
+                    _split_operands(line[m.end() - 1:]), line)
+            self.computations[cur].append(op)
+            self.shapes[name] = type_str
+
+    # ------------------------------------------------------------- costing
+    def _dot_flops(self, op: Op) -> float:
+        out = _shape_list(op.type_str)
+        out_elems = math.prod(out[0][1] or [1]) if out else 1
+        mm = _CONTRACT_RE.search(op.line)
+        contracted = 1
+        if mm and op.operands:
+            lhs_type = self.shapes.get(op.operands[0], "")
+            lhs = _shape_list(lhs_type)
+            if lhs:
+                dims = lhs[0][1]
+                for idx in (int(x) for x in mm.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contracted *= dims[idx]
+        return 2.0 * out_elems * contracted
+
+    def _op_bytes(self, op: Op) -> float:
+        if op.opcode in _FREE_OPS:
+            return 0.0
+        # sliced/in-place ops touch only the slice, not the whole operand
+        if op.opcode in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * _bytes_of(op.type_str)
+        if op.opcode == "dynamic-update-slice":
+            upd = (_bytes_of(self.shapes.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else 0)
+            return 2.0 * upd   # read-modify-write of the updated slice
+        if op.opcode == "scatter":
+            upd = (_bytes_of(self.shapes.get(op.operands[2], ""))
+                   if len(op.operands) > 2 else _bytes_of(op.type_str))
+            return 2.0 * upd
+        total = _bytes_of(op.type_str)
+        for o in op.operands:
+            total += _bytes_of(self.shapes.get(o, ""))
+        return float(total)
+
+    def _fusion_io(self, op: Op, comp: str) -> float:
+        """Kernel-level IO of a fusion callsite, slice-aware.
+
+        A fusion reads its operands and writes its result once — except
+        that an operand consumed ONLY through (dynamic-)slice/gather inside
+        the fusion is read at slice size, not full size (e.g. scanned layer
+        weights: the stacked (L, ...) array feeds one per-layer slice), and
+        a dynamic-update-slice root writes only the updated slice (KV-cache
+        appends).  Without this, decode steps appear to re-read every
+        stacked weight and rewrite the whole cache each token."""
+        ops = self.computations.get(comp, [])
+        # parameter index -> op name inside the fusion
+        param_names: Dict[int, str] = {}
+        uses: Dict[str, List[Op]] = {}
+        for o in ops:
+            if o.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o.line)
+                if m:
+                    param_names[int(m.group(1))] = o.name
+            for src in o.operands:
+                uses.setdefault(src, []).append(o)
+
+        # In-place append fusions (KV-cache updates, scan-carry writes):
+        # a dynamic-update-slice on a buffer the same shape as the fusion
+        # result means the big buffer aliases through — its real traffic is
+        # the updated slice, not two copies of the buffer (XLA CPU may wrap
+        # the DUS in whole-buffer converts; TPU+donation updates in place).
+        dus_ops = [o for o in ops if o.opcode == "dynamic-update-slice"]
+        out_bytes = _bytes_of(op.type_str)
+        if dus_ops:
+            io = 0.0
+            upd = sum(_bytes_of(self.shapes.get(o.operands[1], ""))
+                      if len(o.operands) > 1 else 0.0 for o in dus_ops)
+            io += 2.0 * upd
+            for idx, operand in enumerate(op.operands):
+                ob = _bytes_of(self.shapes.get(operand, ""))
+                if ob != out_bytes:        # pass-through buffer excluded
+                    io += ob
+            return io
+
+        io = 0.0
+        sliced = {"dynamic-slice", "slice", "gather"}
+        for idx, operand in enumerate(op.operands):
+            full = _bytes_of(self.shapes.get(operand, ""))
+            pname = param_names.get(idx)
+            consumers = uses.get(pname, []) if pname else []
+            if consumers and all(c.opcode in sliced or
+                                 (c.opcode == "dynamic-update-slice"
+                                  and c.operands and c.operands[0] == pname)
+                                 for c in consumers):
+                eff = 0.0
+                for c in consumers:
+                    if c.opcode in sliced:
+                        eff += _bytes_of(c.type_str)
+                    else:  # DUS destination: read-modify-write of update
+                        eff += (_bytes_of(self.shapes.get(c.operands[1], ""))
+                                if len(c.operands) > 1 else 0.0)
+                io += min(eff, full)
+            else:
+                io += full
+
+        # root DUS: the written bytes are the update, not the whole buffer
+        root = ops[-1] if ops else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = (_bytes_of(self.shapes.get(root.operands[1], ""))
+                   if len(root.operands) > 1 else 0.0)
+            io += upd
+        else:
+            io += _bytes_of(op.type_str)
+        return io
+
+    def _trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for op in self.computations.get(cond_comp, []):
+            consts += [int(x) for x in _CONST_RE.findall(op.line)]
+        return max(consts) if consts else 1
+
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total  # guard against cycles
+        for op in self.computations.get(comp, []):
+            if op.opcode == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    trips = self._trip_count(m.group(1))
+                    total += self.comp_cost(m.group(2)).scaled(trips)
+                continue
+            if op.opcode == "conditional":
+                mb = _BRANCHES_RE.search(op.line)
+                if mb:
+                    branches = re.findall(r"%([\w.\-]+)", mb.group(1))
+                    costs = [self.comp_cost(b) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.bytes)
+                        total += best
+                continue
+            mc = _CALLS_RE.search(op.line)
+            if mc and op.opcode in ("fusion", "call", "async-start"):
+                inner = self.comp_cost(mc.group(1))
+                total.flops += inner.flops
+                total.bytes += inner.bytes
+                for k in COLLECTIVE_OPS:
+                    total.coll[k] += inner.coll[k]
+                if op.opcode == "fusion":
+                    total.bytes_io += self._fusion_io(op, mc.group(1))
+                    continue
+                total.bytes_io += inner.bytes_io
+                continue
+            if op.opcode == "dot":
+                total.flops += self._dot_flops(op)
+            if op.opcode in COLLECTIVE_OPS or any(
+                    op.opcode.startswith(c + "-") for c in COLLECTIVE_OPS):
+                base = next((c for c in COLLECTIVE_OPS
+                             if op.opcode == c or
+                             op.opcode.startswith(c + "-")), None)
+                if base and not op.opcode.endswith("-done"):
+                    total.coll[base] += _bytes_of(op.type_str)
+            b = self._op_bytes(op)
+            total.bytes += b
+            total.bytes_io += b
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def module_cost(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).entry_cost()

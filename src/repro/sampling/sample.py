@@ -1,0 +1,60 @@
+"""Token sampling: greedy / temperature / top-k / top-p, plus the
+categorical draw used by speculative decoding's residual distribution."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+    top_p: float = 1.0           # 1 => disabled
+
+
+def adjust_logits(logits: jax.Array, params: SamplingParams) -> jax.Array:
+    """Apply temperature/top-k/top-p filtering; returns adjusted logits."""
+    if params.temperature <= 0.0:
+        return logits
+    logits = logits / params.temperature
+    if params.top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -params.top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return logits
+
+
+def probs_from_logits(logits: jax.Array, params: SamplingParams) -> jax.Array:
+    """Post-adjustment probabilities (what speculative decoding verifies
+    against)."""
+    if params.temperature <= 0.0:
+        # greedy as a (degenerate) distribution
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                              dtype=jnp.float32)
+    return jax.nn.softmax(adjust_logits(logits, params), axis=-1)
+
+
+def sample(logits: jax.Array, params: SamplingParams,
+           key: Optional[jax.Array]) -> jax.Array:
+    """logits (..., V) -> token ids (...)."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    adj = adjust_logits(logits, params)
+    return jax.random.categorical(key, adj, axis=-1)
+
+
+def sample_from_probs(probs: jax.Array, key: jax.Array) -> jax.Array:
+    return jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)),
+                                  axis=-1)

@@ -1,0 +1,225 @@
+"""Single-model inference engine: jitted prefill/extend/decode with
+shape-bucketing, KV/state session management, and op-level metering.
+
+This is the substrate the SpecReason controller drives.  Two engines (base
++ small) are colocated — the paper's static KV-memory partition between the
+two models is modeled by ``serving.kv_manager``.
+
+Key properties:
+  * ``extend`` pads to a small set of sequence buckets so the whole system
+    runs with a handful of compiled programs (no per-step recompiles) —
+    exactly how a TPU serving stack avoids XLA recompilation.
+  * Trailing-pad writes into the linear KV cache are harmless: queries only
+    attend to positions <= their own, and the next extend overwrites the
+    padded slots (tested in tests/test_engine.py).
+  * every Session keeps ``last_logits`` so speculative decoding can verify
+    gamma draft tokens with exactly one extend (gamma+1 usable
+    distributions) — the chunked-prefill verification of the paper.
+  * all ops are metered (wall time + token counts) for the latency
+    attribution used by the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.kvcache import DecodeState
+from ..models.model import Model
+from ..sampling.sample import SamplingParams, adjust_logits, sample
+
+DEFAULT_BUCKETS = (4, 8, 16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass
+class Session:
+    """One request's generation state on one engine."""
+    state: DecodeState
+    last_logits: Optional[jax.Array]      # (B, V) logits after last token
+    pos: int                               # host mirror of state.pos
+
+    def snapshot(self) -> "Session":
+        # pytrees are immutable; a snapshot is a shallow copy of refs
+        return Session(self.state, self.last_logits, self.pos)
+
+
+@dataclasses.dataclass
+class Meter:
+    prefill_tokens: int = 0
+    prefill_calls: int = 0
+    prefill_time: float = 0.0
+    decode_tokens: int = 0
+    decode_time: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0 if f.type is int else 0.0)
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_len: int = 1024,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS, name: str = "",
+                 pad_id: int = 0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
+        self.name = name or model.cfg.name
+        self.pad_id = pad_id
+        # Trailing pads are invisible to attention caches (position-masked)
+        # but would pollute an SSM's recurrent state -> exact-length extends
+        # (at the cost of more compiled shapes) for ssm/hybrid families.
+        self.exact_lengths = model.cfg.has_ssm
+        self.meter = Meter()
+        # NOTE: no buffer donation here — SpecReason's snapshot/rollback
+        # keeps references to earlier states, which donation would
+        # invalidate.  (A production TPU engine would donate and instead
+        # copy-on-snapshot at step boundaries; see DESIGN.md.)
+        self._prefill_jit = jax.jit(model.prefill)
+        self._decode_jit = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------------ api
+    def new_session(self, batch: int = 1, capacity: Optional[int] = None,
+                    n_cross_src: int = 0, cross_src=None) -> Session:
+        cap = capacity or self.max_len
+        st = self.model.init_state(batch, cap, n_cross_src=n_cross_src)
+        if cross_src is not None:
+            if self.model.cfg.family == "encdec":
+                cross_src = self.model.encode(self.params, cross_src)
+            st = self.model.prep_cross(self.params, st, cross_src)
+        return Session(st, None, 0)
+
+    def _bucket(self, n: int) -> int:
+        if self.exact_lengths:
+            return n
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"extend of {n} tokens exceeds bucket max "
+                         f"{self.buckets[-1]}")
+
+    def extend(self, session: Session, ids: Sequence[int]) -> Session:
+        """Append tokens to the context (chunked prefill).  Returns a new
+        Session whose last_logits follow the final real token."""
+        n = len(ids)
+        if n == 0:
+            return session
+        if session.state.k is not None and \
+                session.pos + n > session.state.capacity:
+            # SSM-only states have no positional capacity (constant size)
+            raise ValueError(f"context overflow: {session.pos}+{n} > "
+                             f"{session.state.capacity}")
+        b = self._bucket(n)
+        padded = list(ids) + [self.pad_id] * (b - n)
+        toks = jnp.asarray(padded, jnp.int32)[None, :]
+        t0 = time.perf_counter()
+        logits, new_state = self._prefill_jit(self.params, toks,
+                                              session.state)
+        logits = jax.block_until_ready(logits)
+        self.meter.prefill_time += time.perf_counter() - t0
+        self.meter.prefill_tokens += b
+        self.meter.prefill_calls += 1
+        # state.pos advanced by the padded amount — correct it
+        new_state = dataclasses.replace(
+            new_state, pos=jnp.asarray(session.pos + n, jnp.int32))
+        return Session(new_state, logits[:, n - 1, :], session.pos + n)
+
+    def extend_logits(self, session: Session, ids: Sequence[int]
+                      ) -> Tuple[jax.Array, Session]:
+        """Like extend, but also returns the (n, V) logits at every position
+        of ``ids`` (used by spec-decode verification and scoring)."""
+        n = len(ids)
+        b = self._bucket(n)
+        padded = list(ids) + [self.pad_id] * (b - n)
+        toks = jnp.asarray(padded, jnp.int32)[None, :]
+        t0 = time.perf_counter()
+        logits, new_state = self._prefill_jit(self.params, toks,
+                                              session.state)
+        logits = jax.block_until_ready(logits)
+        self.meter.prefill_time += time.perf_counter() - t0
+        self.meter.prefill_tokens += b
+        self.meter.prefill_calls += 1
+        new_state = dataclasses.replace(
+            new_state, pos=jnp.asarray(session.pos + n, jnp.int32))
+        return logits[0, :n, :], Session(new_state, logits[:, n - 1, :],
+                                         session.pos + n)
+
+    def decode_one(self, session: Session, token: int) -> Session:
+        """Feed one token, get next-token logits."""
+        toks = jnp.asarray([[token]], jnp.int32)
+        t0 = time.perf_counter()
+        logits, new_state = self._decode_jit(self.params, session.state, toks)
+        logits = jax.block_until_ready(logits)
+        self.meter.decode_time += time.perf_counter() - t0
+        self.meter.decode_tokens += 1
+        return Session(new_state, logits, session.pos + 1)
+
+    def generate(self, session: Session, max_tokens: int,
+                 stop_ids: Sequence[int], params: SamplingParams,
+                 key: jax.Array, collect_probs: bool = False
+                 ) -> Tuple[List[int], Session, List[np.ndarray]]:
+        """Autoregressively sample from last_logits until a stop id or the
+        budget; generated ids (stop id included if hit) are fed back into
+        the context.  Returns (ids, session, per-step probs if requested)."""
+        assert session.last_logits is not None, "prefill before generate"
+        out: List[int] = []
+        probs_list: List[np.ndarray] = []
+        stop = set(int(s) for s in stop_ids)
+        for _ in range(max_tokens):
+            key, sub = jax.random.split(key)
+            logits = session.last_logits[0]
+            tok = int(sample(logits, params, sub))
+            if collect_probs:
+                if params.temperature <= 0:
+                    pr = np.zeros(logits.shape[-1], np.float32)
+                    pr[tok] = 1.0
+                else:
+                    pr = np.asarray(jax.nn.softmax(
+                        adjust_logits(logits, params), axis=-1),
+                        np.float32)
+                probs_list.append(pr)
+            out.append(tok)
+            session = self.decode_one(session, tok)
+            if tok in stop:
+                break
+        return out, session, probs_list
+
+    # ---------------------------------------------------------------- util
+    def rollback(self, session: Session, to: Session,
+                 replay: Sequence[int] = ()) -> Session:
+        """Return the context to snapshot ``to`` and optionally replay
+        tokens on top.  Attention-cache models could truncate in place; the
+        snapshot/replay form is family-agnostic (SSM/hybrid included)."""
+        s = to.snapshot()
+        if replay:
+            s = self.extend(s, list(replay))
+        return s
+
+    @property
+    def can_truncate(self) -> bool:
+        """Attention-only models can roll back by resetting the position
+        (stale cache entries are masked); SSM/hybrid cannot."""
+        return not self.model.cfg.has_ssm
+
+    def truncate(self, session: Session, to_pos: int,
+                 last_logits) -> Session:
+        """O(1) rollback for attention-cache models: keep the cache, reset
+        the position, restore the logits at the new last token (which the
+        caller has from the verification pass).  This is what makes
+        speculative decoding's reject path cheap — no token is ever
+        recomputed (tested against extend-replay in tests/test_engine.py)."""
+        assert self.can_truncate, "SSM states cannot be truncated"
+        assert to_pos <= session.pos
+        import dataclasses as _dc
+        new_state = _dc.replace(session.state,
+                                pos=jnp.asarray(to_pos, jnp.int32))
+        ll = last_logits if last_logits.ndim == 2 else last_logits[None]
+        return Session(new_state, ll, to_pos)

@@ -1,0 +1,86 @@
+"""Static KV-memory partition between the colocated base and small models —
+the paper's §4.1 implementation detail ("memory reserved for KV caches is
+statically partitioned between the two models"), expressed for a TPU HBM
+budget.
+
+Given the per-device HBM budget and both model configs, the manager solves
+for the maximum context capacity each engine can be provisioned with under
+a fixed split fraction, and accounts for every live session's cache."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from ..models.config import ModelConfig
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Attention KV bytes per context token (per sequence)."""
+    if not cfg.has_attention:
+        return 0
+    n_attn = cfg.n_self_layers if cfg.family == "vlm" else cfg.n_layers
+    return n_attn * 2 * cfg.n_kv_heads * cfg.resolved_head_dim * dtype_bytes
+
+
+def ssm_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Constant-size recurrent state bytes (per sequence)."""
+    if not cfg.has_ssm:
+        return 0
+    conv = cfg.n_layers * (cfg.ssm_conv_width - 1) * \
+        (cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state) * dtype_bytes
+    ssm = cfg.n_layers * cfg.ssm_n_heads * cfg.ssm_head_dim * \
+        cfg.ssm_state * 4  # f32 state
+    return conv + ssm
+
+
+@dataclasses.dataclass
+class KVBudget:
+    total_bytes: int
+    base_fraction: float = 0.8      # paper colocates; base dominates
+
+    def split(self) -> Tuple[int, int]:
+        b = int(self.total_bytes * self.base_fraction)
+        return b, self.total_bytes - b
+
+
+class KVManager:
+    """Tracks live sessions' cache usage against the static partition."""
+
+    def __init__(self, base_cfg: ModelConfig, small_cfg: ModelConfig,
+                 budget: KVBudget):
+        self.cfgs = {"base": base_cfg, "small": small_cfg}
+        self.budget = budget
+        b, s = budget.split()
+        self.capacity_bytes = {"base": b, "small": s}
+        self.used_bytes = {"base": 0, "small": 0}
+        self.sessions: Dict[str, Tuple[str, int]] = {}
+
+    def max_context(self, which: str, batch: int = 1) -> int:
+        """Longest context capacity a new batch could be provisioned with."""
+        cfg = self.cfgs[which]
+        per_tok = kv_bytes_per_token(cfg)
+        fixed = ssm_state_bytes(cfg) * batch
+        free = self.capacity_bytes[which] - self.used_bytes[which] - fixed
+        if per_tok == 0:
+            return 1 << 30 if free >= 0 else 0
+        return max(free // (per_tok * batch), 0)
+
+    def allocate(self, session_id: str, which: str, capacity: int,
+                 batch: int = 1) -> bool:
+        cfg = self.cfgs[which]
+        need = kv_bytes_per_token(cfg) * capacity * batch \
+            + ssm_state_bytes(cfg) * batch
+        if self.used_bytes[which] + need > self.capacity_bytes[which]:
+            return False
+        self.used_bytes[which] += need
+        self.sessions[session_id] = (which, need)
+        return True
+
+    def release(self, session_id: str) -> None:
+        which, need = self.sessions.pop(session_id)
+        self.used_bytes[which] -= need
+
+    def utilization(self) -> Dict[str, float]:
+        return {k: self.used_bytes[k] / max(self.capacity_bytes[k], 1)
+                for k in self.used_bytes}

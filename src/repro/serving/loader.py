@@ -1,0 +1,33 @@
+"""Load (or lazily train) the toy testbed engine pair from checkpoints."""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..checkpoint.checkpoint import load_checkpoint
+from ..configs import testbed
+from ..models.model import Model
+from .engine import Engine
+
+
+def load_testbed_engines(ckpt_dir: str = "exp/ckpt", max_len: int = 1024,
+                         auto_train_steps: int = 500
+                         ) -> Tuple[Engine, Engine]:
+    engines = []
+    for which, cfg in (("base", testbed.BASE), ("small", testbed.SMALL)):
+        path = os.path.join(ckpt_dir, f"{cfg.name}.npz")
+        model = Model(cfg)
+        if not os.path.exists(path):
+            print(f"[loader] {path} missing — training {which} "
+                  f"({auto_train_steps} steps)")
+            from ..launch.train import train_testbed_model
+            out = train_testbed_model(which, auto_train_steps, ckpt_dir)
+            params = out["params"]
+        else:
+            params = load_checkpoint(path, model.abstract(jnp.float32))
+        engines.append(Engine(model, params, max_len=max_len,
+                              name=f"testbed-{which}"))
+    return engines[0], engines[1]

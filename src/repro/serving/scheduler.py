@@ -1,0 +1,93 @@
+"""Request scheduler: FIFO admission against the KV budget + round-robin
+service of active SpecReason requests.
+
+The paper serves requests one at a time per GPU pair (sequential small/base
+turns); this scheduler generalizes that to a queue with admission control so
+the serving driver can sustain a workload without oversubscribing the KV
+partition.  Interleaving is cooperative: each turn advances one request by
+one reasoning step (speculate -> verify -> fallback), which keeps
+per-request latency fair and matches the paper's step-granular structure."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import uuid
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+
+from ..core.controller import SpecReason, SpecReasonConfig, SpecReasonResult
+from ..data.tasks import Task, question_tokens
+from .kv_manager import KVBudget, KVManager
+
+
+@dataclasses.dataclass
+class Request:
+    task: Task
+    request_id: str = dataclasses.field(
+        default_factory=lambda: uuid.uuid4().hex[:8])
+    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    result: Optional[SpecReasonResult] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class Scheduler:
+    """Admission-controlled FIFO over a SpecReason engine pair."""
+
+    def __init__(self, controller: SpecReason, kv: KVManager,
+                 context_capacity: int = 1024):
+        self.controller = controller
+        self.kv = kv
+        self.context_capacity = context_capacity
+        self.queue: Deque[Request] = deque()
+        self.done: List[Request] = []
+
+    def submit(self, task: Task) -> Request:
+        req = Request(task)
+        self.queue.append(req)
+        return req
+
+    def step(self, key: jax.Array) -> Optional[Request]:
+        """Admit + fully serve the next request (the paper's sequential
+        regime).  Returns the finished request or None if queue empty /
+        admission blocked."""
+        if not self.queue:
+            return None
+        req = self.queue[0]
+        ok_b = self.kv.allocate(req.request_id + ":b", "base",
+                                self.context_capacity)
+        ok_s = self.kv.allocate(req.request_id + ":s", "small",
+                                self.context_capacity)
+        if not (ok_b and ok_s):
+            if ok_b:
+                self.kv.release(req.request_id + ":b")
+            if ok_s:
+                self.kv.release(req.request_id + ":s")
+            return None
+        self.queue.popleft()
+        try:
+            req.result = self.controller.run(question_tokens(req.task), key)
+            req.finished_at = time.perf_counter()
+        finally:
+            self.kv.release(req.request_id + ":b")
+            self.kv.release(req.request_id + ":s")
+        self.done.append(req)
+        return req
+
+    def drain(self, key: jax.Array) -> List[Request]:
+        out = []
+        while self.queue:
+            key, sub = jax.random.split(key)
+            r = self.step(sub)
+            if r is None:
+                break
+            out.append(r)
+        return out

@@ -1,0 +1,206 @@
+"""SpecReason controller behavior: accept/reject paths, knobs, budget,
+family-agnostic rollback (runs on an SSM base model too)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import (DynamicThreshold, LogprobMargin,
+                                 StaticThreshold, Verdict)
+from repro.core.segmenter import SegmenterConfig, StepSegmenter
+from repro.core.verifier import Verifier
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.tokenizer import toy as tk
+
+
+def _mk(family="dense", seed=0, layers=2, d=64):
+    kw = dict(name=f"m{seed}", family=family, n_layers=layers, d_model=d,
+              n_heads=4, n_kv_heads=2, head_dim=16, d_ff=2 * d,
+              vocab_size=tk.VOCAB_SIZE)
+    if family == "ssm":
+        kw.update(n_heads=1, n_kv_heads=1, d_ff=0, ssm_state=16,
+                  ssm_head_dim=16, ssm_chunk=16)
+    cfg = ModelConfig(**kw).validate()
+    m = Model(cfg)
+    return Engine(m, m.init(jax.random.PRNGKey(seed)), max_len=512)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return _mk(seed=0, layers=3, d=96), _mk(seed=1, layers=1, d=32)
+
+
+def _prompt():
+    return [tk.BOS, tk.Q_OPEN, tk.TOK2ID["start"], *tk.num_ids(12),
+            tk.Q_CLOSE, tk.THINK]
+
+
+def test_accept_all_path(pair):
+    """Threshold 0 accepts everything -> all steps from the small model."""
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(0.0), token_budget=40, max_steps=5))
+    res = sr.run(_prompt(), jax.random.PRNGKey(0))
+    judged = [s for s in res.steps if s.source == "small"]
+    assert judged and all(s.accepted for s in judged)
+    assert res.accept_rate == 1.0
+
+
+def test_reject_all_path(pair):
+    """Threshold 10 rejects everything -> base regenerates every step and
+    the result contains only base-source accepted steps."""
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(10.0), token_budget=40, max_steps=5))
+    res = sr.run(_prompt(), jax.random.PRNGKey(0))
+    assert all(not s.accepted for s in res.steps if s.source == "small")
+    assert any(s.source == "base" for s in res.steps)
+    assert res.accept_rate == 0.0
+
+
+def test_first_n_base_knob(pair):
+    """first_n_base=k forces the first k steps to the base model (no small
+    speculation records for them)."""
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(0.0), first_n_base=2, token_budget=40,
+        max_steps=4))
+    res = sr.run(_prompt(), jax.random.PRNGKey(0))
+    assert len(res.steps) >= 2
+    assert res.steps[0].source == "base"
+    assert res.steps[1].source == "base"
+
+
+def test_budget_respected(pair):
+    base, small = pair
+    budget = 24
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(0.0), token_budget=budget, max_steps=50))
+    res = sr.run(_prompt(), jax.random.PRNGKey(1))
+    seg = StepSegmenter()
+    # budget may be exceeded by at most one step + the forced closer
+    assert res.n_thinking_tokens <= budget + seg.cfg.max_step_tokens + 1
+
+
+def test_controller_on_ssm_base():
+    """Family-agnostic rollback: the base model is an SSM (no KV cache to
+    truncate — snapshots must carry the recurrent state)."""
+    base = _mk(family="ssm", seed=3, layers=2, d=64)
+    small = _mk(seed=4, layers=1, d=32)
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=32, max_steps=4))
+    res = sr.run(_prompt(), jax.random.PRNGKey(2))
+    assert res.n_thinking_tokens > 0
+    assert res.answer_ids is not None
+
+
+def test_hierarchical_mode_runs(pair):
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(10.0), use_spec_decode=True, spec_gamma=3,
+        token_budget=32, max_steps=4))
+    res = sr.run(_prompt(), jax.random.PRNGKey(3))
+    assert res.spec_stats.proposed > 0  # spec decode actually engaged
+
+
+def test_verifier_session_discipline(pair):
+    """verify() must return a session positioned after the step body+delim
+    and must NOT leak the score token into the context."""
+    base, _ = pair
+    v = Verifier(base)
+    sess = base.extend(base.new_session(), _prompt())
+    body = tk.num_ids(12) + [tk.TOK2ID["plus"]] + tk.num_ids(3)
+    r = v.verify(sess, body, tk.STEP)
+    # session stops after the body; the delimiter is appended on acceptance
+    assert r.session_after_step.pos == sess.pos + len(body)
+    assert 0.0 <= r.utility <= 9.0
+    assert 0 <= r.argmax_score <= 9
+
+
+def test_policies():
+    st = StaticThreshold(7.0)
+    assert st.judge(7.0).accept and not st.judge(6.9).accept
+    dyn = DynamicThreshold(target_accept=0.5, threshold=5.0)
+    t0 = dyn.threshold
+    for _ in range(10):
+        dyn.observe(Verdict(True, 9.0))
+    assert dyn.threshold > t0  # accepting too much -> tighten
+    lp = LogprobMargin()
+    assert lp.utility_from_logprob(-0.05) == pytest.approx(9.0)
+    assert lp.utility_from_logprob(-10.0) == 0.0
+
+
+def test_segmenter():
+    seg = StepSegmenter()
+    stream = tk.num_ids(1) + [tk.STEP] + tk.num_ids(2) + [tk.THINK_END]
+    steps = seg.split_stream(stream)
+    assert len(steps) == 2
+    assert seg.classify_end(tk.num_ids(1) + [tk.STEP]) == "step"
+    assert seg.classify_end([tk.THINK_END]) == "final"
+    assert seg.classify_end(tk.num_ids(1)) == "runaway"
+    assert seg.body(tk.num_ids(1) + [tk.STEP]) == tk.num_ids(1)
+
+
+def test_verifier_score_prompt_format_matches_training(pair):
+    """Regression guard: the verification score prompt must be
+    '<step-body> <score>' with NO step delimiter in between — exactly the
+    training format of data.tasks.score_example.  (A format mismatch here
+    silently destroyed judge correlation; see EXPERIMENTS.md §Fig 7.)"""
+    import random
+    from repro.data import tasks
+
+    rng = random.Random(0)
+    ex = tasks.score_example(rng)
+    # training: ... candidate tokens, <score>, digit — no <step> before
+    # <score>
+    assert ex.tokens[-2] == tk.SCORE
+    assert tk.STEP not in ex.tokens[-10:-2], \
+        "training format has no <step> before <score>"
+
+    # runtime: the verifier extends body then <score>; the number of
+    # prefill calls before reading the score must be exactly 2 (body,
+    # score) and the score call must contain only the score token
+    base, _ = pair
+    v = Verifier(base)
+    sess = base.extend(base.new_session(), _prompt())
+    base.meter.reset()
+    body = tk.num_ids(12) + [tk.TOK2ID["plus"]] + tk.num_ids(3)
+    v.verify(sess, body, tk.STEP)
+    assert base.meter.prefill_calls == 2
+
+
+def test_overlapped_speculation(pair):
+    """Overlapped mode pre-drafts step k+1 during step k's verification:
+    with an accept-all policy the result must contain the same kind of
+    trace, report overlap-eligible time, and keep sessions coherent."""
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(0.0), token_budget=40, max_steps=5,
+        overlapped=True))
+    # untrained models only sometimes emit clean <step> boundaries — find
+    # a seed whose trace contains one (the pre-draft trigger)
+    hit = None
+    for seed in range(12):
+        res = sr.run(_prompt(), jax.random.PRNGKey(seed))
+        if res.overlapped_s > 0.0:
+            hit = res
+            break
+    assert hit is not None, "no seed produced a <step>-terminated draft"
+    assert hit.critical_path_s < hit.wall_time
+
+
+def test_overlapped_discards_pending_on_reject(pair):
+    """With a reject-all policy every pre-draft is thrown away; the
+    result must equal the plain reject-all trace (base regenerates all)."""
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(10.0), token_budget=32, max_steps=4,
+        overlapped=True))
+    res = sr.run(_prompt(), jax.random.PRNGKey(5))
+    assert all(not s.accepted for s in res.steps if s.source == "small")
+    assert any(s.source == "base" for s in res.steps)

@@ -1,0 +1,127 @@
+"""Engine semantics: bucket padding harmlessness, extend/decode
+equivalence, snapshot/rollback, metering, SSM exact-length mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.tokenizer import toy as tk
+
+
+def _mk_engine(family="dense", **kw):
+    base = dict(name=f"e-{family}", family=family, n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=tk.VOCAB_SIZE)
+    if family in ("ssm", "hybrid"):
+        base.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if family == "ssm":
+        base.update(n_heads=1, n_kv_heads=1, d_ff=0)
+    base.update(kw)
+    cfg = ModelConfig(**base).validate()
+    m = Model(cfg)
+    return Engine(m, m.init(jax.random.PRNGKey(0)), max_len=256)
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_padded_extend_equals_tokenwise_decode(family):
+    """extend() in one bucketed call == feeding tokens one at a time.
+    For attention models this proves trailing-pad writes are invisible;
+    for SSM models it proves the exact-length path is used."""
+    eng = _mk_engine(family)
+    ids = [tk.BOS, tk.THINK] + tk.num_ids(37) + tk.num_ids(81) + [tk.STEP]
+    s1 = eng.extend(eng.new_session(), ids)
+
+    s2 = eng.extend(eng.new_session(), ids[:1])
+    for t in ids[1:]:
+        s2 = eng.decode_one(s2, t)
+    np.testing.assert_allclose(np.asarray(s1.last_logits),
+                               np.asarray(s2.last_logits), rtol=2e-4,
+                               atol=2e-4)
+    assert s1.pos == s2.pos == len(ids)
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_snapshot_rollback_replay(family):
+    """rollback(snapshot, replay=other) must equal a fresh context with the
+    other tokens — the controller's reject path for every family."""
+    eng = _mk_engine(family)
+    prefix = [tk.BOS, tk.THINK] + tk.num_ids(5)
+    rejected = tk.num_ids(50) + [tk.STEP]
+    replacement = tk.num_ids(99) + [tk.STEP]
+
+    snap = eng.extend(eng.new_session(), prefix)
+    bad = eng.extend(snap, rejected)           # speculated, then rejected
+    fixed = eng.rollback(bad, snap, replay=replacement)
+
+    expect = eng.extend(eng.new_session(), prefix + replacement)
+    np.testing.assert_allclose(np.asarray(fixed.last_logits),
+                               np.asarray(expect.last_logits), rtol=2e-4,
+                               atol=2e-4)
+    assert fixed.pos == expect.pos
+
+
+def test_context_overflow_raises():
+    eng = _mk_engine("dense")
+    s = eng.new_session(capacity=8)
+    with pytest.raises(ValueError, match="overflow"):
+        eng.extend(s, list(range(9)))
+
+
+def test_meter_accounting():
+    eng = _mk_engine("dense")
+    eng.meter.reset()
+    s = eng.extend(eng.new_session(), [tk.BOS, tk.THINK])
+    s, = (eng.decode_one(s, tk.STEP),)
+    assert eng.meter.prefill_calls == 1
+    assert eng.meter.decode_tokens == 1
+    assert eng.meter.prefill_time > 0 and eng.meter.decode_time > 0
+
+
+def test_generate_stop_and_budget():
+    eng = _mk_engine("dense")
+    s = eng.extend(eng.new_session(), [tk.BOS, tk.THINK])
+    ids, s, _ = eng.generate(s, 10, [tk.EOS, tk.THINK_END],
+                             SamplingParams(temperature=0.0),
+                             jax.random.PRNGKey(0))
+    assert len(ids) <= 10
+    if len(ids) < 10:
+        assert ids[-1] in (tk.EOS, tk.THINK_END)
+
+
+def test_exact_lengths_flag():
+    assert _mk_engine("ssm").exact_lengths
+    assert _mk_engine("hybrid").exact_lengths
+    assert not _mk_engine("dense").exact_lengths
+
+
+def test_truncate_matches_replay():
+    """O(1) truncation rollback == snapshot+replay for attention engines
+    (the spec-decode reject path)."""
+    import numpy as np
+    eng = _mk_engine("dense")
+    prefix = [tk.BOS, tk.THINK] + tk.num_ids(5)
+    spec = tk.num_ids(7) + tk.num_ids(3)     # 4 speculated tokens
+    snap = eng.extend(eng.new_session(), prefix)
+    with_cache = eng.extend(snap, spec)      # cache holds all 4
+    # keep first 2 speculated tokens, re-decode the 3rd
+    suffix = spec[:3]
+    fast = eng.truncate(with_cache, snap.pos + 2, snap.last_logits)
+    fast = eng.decode_one(fast, suffix[-1])
+    slow = eng.rollback(with_cache, snap, replay=suffix)
+    np.testing.assert_allclose(np.asarray(fast.last_logits),
+                               np.asarray(slow.last_logits),
+                               rtol=2e-4, atol=2e-4)
+    assert fast.pos == slow.pos
+
+
+def test_truncate_refused_for_ssm():
+    eng = _mk_engine("ssm")
+    assert not eng.can_truncate
+    s = eng.extend(eng.new_session(), [tk.BOS])
+    with pytest.raises(AssertionError):
+        eng.truncate(s, 0, s.last_logits)

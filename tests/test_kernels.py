@@ -1,0 +1,137 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret mode) against
+its pure-jnp oracle in ref.py, across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,kh,s,hd", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 4, 2, 256, 64),      # GQA 2:1
+    (1, 8, 2, 256, 32),      # GQA 4:1
+    (2, 2, 1, 512, 128),     # MQA, long
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, kh, s, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kh, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kh, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    exp = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    exp = ref.mha_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,kh,s,hd", [
+    (2, 4, 2, 256, 64),
+    (1, 8, 8, 512, 32),
+    (3, 6, 2, 512, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, h, kh, s, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, kh, s, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, kh, s, hd), dtype)
+    lens = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attention(q, kc, vc, lens, interpret=True)
+    exp = ref.decode_reference(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ragged_lengths():
+    """One compiled kernel must serve rows of different context lengths."""
+    b, h, kh, s, hd = 4, 4, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, kh, s, hd))
+    vc = jax.random.normal(ks[2], (b, kh, s, hd))
+    lens = jnp.array([1, 100, 137, 256], jnp.int32)
+    out = decode_attention(q, kc, vc, lens, interpret=True)
+    exp = ref.decode_reference(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (1, 128, 2, 16, 1, 16, 32),
+    (2, 256, 4, 16, 2, 32, 64),
+    (1, 256, 4, 32, 1, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, l, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = (jax.random.normal(ks[3], (b, l, g, n)) * 0.3).astype(dtype)
+    cc = (jax.random.normal(ks[4], (b, l, g, n)) * 0.3).astype(dtype)
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    y, fin = ssd_scan(x, dt.astype(jnp.float32), a, bb, cc, chunk, init,
+                      interpret=True)
+    ye, fe = ref.ssd_reference(x, dt.astype(jnp.float32), a, bb, cc, init)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fe), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssd_scan_state_resume():
+    """Splitting a sequence across two kernel calls with state carry must
+    equal one call — SpecReason's SSM step-boundary snapshots rely on it."""
+    b, l, h, p, g, n = 1, 256, 2, 16, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = jax.random.normal(ks[3], (b, l, g, n)) * 0.3
+    cc = jax.random.normal(ks[4], (b, l, g, n)) * 0.3
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    y_full, f_full = ssd_scan(x, dt, a, bb, cc, 64, init, interpret=True)
+    half = l // 2
+    y1, f1 = ssd_scan(x[:, :half], dt[:, :half], a, bb[:, :half],
+                      cc[:, :half], 64, init, interpret=True)
+    y2, f2 = ssd_scan(x[:, half:], dt[:, half:], a, bb[:, half:],
+                      cc[:, half:], 64, f1, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f_full), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ops_dispatch():
+    """ops.py wrappers run in interpret mode on CPU."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    out = ops.flash_mha(q, k, v)
+    assert out.shape == q.shape
+    assert not bool(jnp.any(jnp.isnan(out)))

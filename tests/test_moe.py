@@ -1,0 +1,83 @@
+"""MoE routing invariants (hypothesis property tests) + dispatch math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe
+from repro.models.config import ModelConfig
+
+
+def _cfg(e=4, k=2, cap=2.0, group=16):
+    return ModelConfig(name="moe-t", family="moe", n_layers=1, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab_size=64, n_experts=e, top_k=k,
+                       capacity_factor=cap, moe_group_size=group).validate()
+
+
+@given(st.integers(0, 1000), st.sampled_from([4, 8]), st.sampled_from([1, 2]))
+@settings(max_examples=20, deadline=None)
+def test_route_invariants(seed, e, k):
+    cfg = _cfg(e=e, k=k)
+    g, s = 2, 16
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (g, s, e))
+    c = moe.group_capacity(s, cfg)
+    dispatch, combine, aux = moe.route(logits, cfg, c)
+    d = np.asarray(dispatch)
+    w = np.asarray(combine)
+    # each (token, expert) buffer slot holds at most one token
+    assert (d.sum(axis=1) <= 1.0 + 1e-5).all(), "slot double-booked"
+    # each token dispatched to at most top_k slots
+    assert (d.sum(axis=(2, 3)) <= k + 1e-5).all()
+    # combine weights are a sub-distribution (drops reduce the sum)
+    token_w = w.sum(axis=(2, 3))
+    assert (token_w <= 1.0 + 1e-5).all()
+    assert 0.0 <= float(aux["dropped_frac"]) <= 1.0
+    assert float(aux["load_balance"]) >= 0.99  # >= 1 at optimum, ~E if bad
+
+
+def test_no_drops_with_big_capacity():
+    cfg = _cfg(cap=8.0)
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4))
+    c = moe.group_capacity(16, cfg)
+    _, combine, aux = moe.route(logits, cfg, c)
+    assert float(aux["dropped_frac"]) == 0.0
+    np.testing.assert_allclose(np.asarray(combine).sum(axis=(2, 3)), 1.0,
+                               atol=1e-5)
+
+
+def test_apply_moe_shapes_and_grads():
+    cfg = _cfg()
+    from repro.models.layers import init_params
+    params = init_params(moe.moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe.apply_moe(x, p, cfg)
+        return jnp.sum(y ** 2) + moe.aux_loss(aux, cfg)
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree.leaves(g):
+        assert not bool(jnp.any(jnp.isnan(leaf)))
+
+
+def test_moe_matches_dense_expert_sum_when_top_k_equals_experts():
+    """With top_k == n_experts and huge capacity, MoE output equals the
+    gate-weighted sum over all experts computed densely."""
+    cfg = _cfg(e=4, k=4, cap=8.0)
+    from repro.models.layers import init_params
+    params = init_params(moe.moe_spec(cfg), jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    y, _ = moe.apply_moe(x, params, cfg)
+
+    xt = x.reshape(-1, cfg.d_model)
+    logits = jnp.einsum("td,de->te", xt, params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    dense = jnp.zeros_like(xt)
+    for ei in range(cfg.n_experts):
+        h = jax.nn.silu(xt @ params["w_gate"][ei]) * (xt @ params["w_up"][ei])
+        dense = dense + probs[:, ei:ei + 1] * (h @ params["w_down"][ei])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(dense), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,54 @@
+"""Sampling: greedy/temperature/top-k/top-p filtering properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sampling.sample import (SamplingParams, adjust_logits,
+                                   probs_from_logits, sample)
+
+
+def test_greedy_is_argmax():
+    logits = jnp.asarray([0.1, 3.0, -1.0, 2.9])
+    assert int(sample(logits, SamplingParams(temperature=0.0), None)) == 1
+
+
+def test_top_k_masks_everything_else():
+    logits = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    adj = adjust_logits(logits, SamplingParams(temperature=1.0, top_k=2))
+    assert np.isfinite(np.asarray(adj))[3:].all()
+    assert (np.asarray(adj)[:3] == -np.inf).all()
+
+
+def test_top_p_keeps_smallest_covering_set():
+    probs = np.array([0.5, 0.3, 0.15, 0.05])
+    logits = jnp.log(jnp.asarray(probs))
+    adj = np.asarray(adjust_logits(logits,
+                                   SamplingParams(temperature=1.0,
+                                                  top_p=0.75)))
+    # 0.5 + 0.3 >= 0.75 -> keep exactly the top two
+    assert np.isfinite(adj[:2]).all() and (adj[2:] == -np.inf).all()
+
+
+@given(st.integers(0, 10000))
+@settings(max_examples=20, deadline=None)
+def test_probs_from_logits_normalized(seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+    p = probs_from_logits(logits, SamplingParams(temperature=0.7, top_p=0.9))
+    assert float(jnp.sum(p)) == pytest.approx(1.0, abs=1e-5)
+    assert float(jnp.min(p)) >= 0.0
+
+
+def test_greedy_probs_are_one_hot():
+    logits = jnp.asarray([0.0, 5.0, 1.0])
+    p = np.asarray(probs_from_logits(logits, SamplingParams(temperature=0.0)))
+    assert p[1] == 1.0 and p.sum() == 1.0
+
+
+def test_temperature_sharpens():
+    logits = jnp.asarray([1.0, 2.0])
+    hot = probs_from_logits(logits, SamplingParams(temperature=2.0))
+    cold = probs_from_logits(logits, SamplingParams(temperature=0.5))
+    assert float(cold[1]) > float(hot[1])

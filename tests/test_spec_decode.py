@@ -1,0 +1,118 @@
+"""Token-level speculative decoding correctness.
+
+The decisive property: greedy spec-decode output is IDENTICAL to greedy
+base-model decoding, token for token, for any draft model — that is what
+"exact acceleration" means.  Sampled mode is validated via the rejection-
+sampling rule on known distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import spec_decode_reason, vanilla_reason
+from repro.core.spec_decode import SpecDecodeStats, spec_decode
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.tokenizer import toy as tk
+
+
+@pytest.fixture(scope="module")
+def engines():
+    base_cfg = ModelConfig(name="b", family="dense", n_layers=2, d_model=64,
+                           n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                           vocab_size=tk.VOCAB_SIZE)
+    small_cfg = ModelConfig(name="s", family="dense", n_layers=1, d_model=32,
+                            n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                            vocab_size=tk.VOCAB_SIZE)
+    base = Engine(Model(base_cfg),
+                  Model(base_cfg).init(jax.random.PRNGKey(0)), max_len=256,
+                  name="base")
+    small = Engine(Model(small_cfg),
+                   Model(small_cfg).init(jax.random.PRNGKey(1)), max_len=256,
+                   name="small")
+    return base, small
+
+
+@pytest.mark.parametrize("gamma", [1, 3, 4, 8])
+def test_greedy_exactness(engines, gamma):
+    base, small = engines
+    prompt = [tk.BOS, tk.Q_OPEN] + tk.num_ids(42) + [tk.Q_CLOSE, tk.THINK]
+    key = jax.random.PRNGKey(7)
+    gs = SamplingParams(temperature=0.0)
+
+    b0 = base.extend(base.new_session(), prompt)
+    ref_ids, _, _ = base.generate(b0, 24, [tk.EOS], gs, key)
+
+    b1 = base.extend(base.new_session(), prompt)
+    s1 = small.extend(small.new_session(), prompt)
+    out, _, _ = spec_decode(base, small, b1, s1, 24, [tk.EOS], gs, key,
+                            gamma=gamma)
+    assert out[:len(ref_ids)] == ref_ids[:len(out)], \
+        f"gamma={gamma}: {out} != {ref_ids}"
+
+
+def test_greedy_exactness_selfdraft(engines):
+    """Draft == base -> every token accepted, still exact."""
+    base, _ = engines
+    prompt = [tk.BOS, tk.THINK]
+    key = jax.random.PRNGKey(9)
+    gs = SamplingParams(temperature=0.0)
+    b0 = base.extend(base.new_session(), prompt)
+    ref_ids, _, _ = base.generate(b0, 16, [tk.EOS], gs, key)
+
+    b1 = base.extend(base.new_session(), prompt)
+    b2 = base.extend(base.new_session(), prompt)
+    stats = SpecDecodeStats()
+    out, _, _ = spec_decode(base, base, b1, b2, 16, [tk.EOS], gs, key,
+                            gamma=4, stats=stats)
+    assert out[:len(ref_ids)] == ref_ids[:len(out)]
+    assert stats.acceptance_rate == 1.0
+
+
+def test_sessions_stay_in_sync(engines):
+    """After spec_decode both engines' contexts hold the same tokens (same
+    positions), so the next round verifies against a coherent prefix."""
+    base, small = engines
+    prompt = [tk.BOS, tk.THINK]
+    key = jax.random.PRNGKey(11)
+    sp = SamplingParams(temperature=0.8)
+    b = base.extend(base.new_session(), prompt)
+    s = small.extend(small.new_session(), prompt)
+    out, b, s = spec_decode(base, small, b, s, 20, [tk.EOS], sp, key,
+                            gamma=3)
+    assert b.pos == len(prompt) + len(out)
+    assert s.pos == len(prompt) + len(out)
+
+
+def test_residual_sampling_rule():
+    """Unit check of the accept/resample math on known p/q distributions:
+    acceptance probability of token t is min(1, p/q); the residual is
+    (p-q)_+ normalized."""
+    p = np.array([0.5, 0.3, 0.2], np.float64)
+    q = np.array([0.2, 0.6, 0.2], np.float64)
+    n = 40000
+    rng = np.random.default_rng(0)
+    out = np.zeros(3)
+    for _ in range(n):
+        t = rng.choice(3, p=q)
+        if rng.random() < min(1.0, p[t] / q[t]):
+            out[t] += 1
+        else:
+            resid = np.maximum(p - q, 0)
+            resid /= resid.sum()
+            out[rng.choice(3, p=resid)] += 1
+    freq = out / n
+    np.testing.assert_allclose(freq, p, atol=0.015)
+
+
+def test_baseline_wrappers_run(engines):
+    base, small = engines
+    prompt = [tk.BOS, tk.THINK]
+    key = jax.random.PRNGKey(3)
+    rv = vanilla_reason(base, prompt, key, token_budget=16)
+    rs = spec_decode_reason(base, small, prompt, key, token_budget=16)
+    assert rv.n_thinking_tokens > 0 and rs.n_thinking_tokens > 0
+    assert rv.wall_time > 0 and rs.wall_time > 0

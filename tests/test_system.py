@@ -1,0 +1,78 @@
+"""End-to-end system behavior for the SpecReason stack (mechanism level —
+the trained-model behavior experiments live in benchmarks/)."""
+
+import jax
+import pytest
+
+from repro.core.baselines import spec_decode_reason, vanilla_reason
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.data import tasks
+from repro.tokenizer import toy as tk
+import random
+
+
+@pytest.fixture(scope="module")
+def stack():
+    base_cfg = ModelConfig(name="sys-base", family="dense", n_layers=3,
+                           d_model=96, n_heads=4, n_kv_heads=2, head_dim=24,
+                           d_ff=192, vocab_size=tk.VOCAB_SIZE)
+    small_cfg = ModelConfig(name="sys-small", family="dense", n_layers=1,
+                            d_model=48, n_heads=2, n_kv_heads=2, head_dim=24,
+                            d_ff=96, vocab_size=tk.VOCAB_SIZE)
+    base = Engine(Model(base_cfg), Model(base_cfg).init(jax.random.PRNGKey(0)),
+                  max_len=512, name="base")
+    small = Engine(Model(small_cfg),
+                   Model(small_cfg).init(jax.random.PRNGKey(1)),
+                   max_len=512, name="small")
+    task = tasks.sample_task(random.Random(0))
+    return base, small, tasks.question_tokens(task)
+
+
+def test_specreason_result_invariants(stack):
+    base, small, prompt = stack
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=48, max_steps=6))
+    res = sr.run(prompt, jax.random.PRNGKey(42))
+    # thinking tokens == sum of accepted step tokens (+delims/closers)
+    accepted_tokens = sum(len(s.tokens) for s in res.steps if s.accepted)
+    assert res.n_thinking_tokens >= accepted_tokens
+    assert res.meters["base"]["prefill_calls"] > 0
+    assert res.wall_time > 0
+    # every small-sourced accepted step passed the threshold
+    for s in res.steps:
+        if s.source == "small" and s.accepted:
+            assert s.utility >= 5.0
+
+
+def test_greedy_sr_and_srd_agree(stack):
+    """With temperature=0, SpecReason+Decode must produce exactly the same
+    tokens as SpecReason (token-level speculation is exact)."""
+    base, small, prompt = stack
+    common = dict(policy=StaticThreshold(7.0), token_budget=40, max_steps=5,
+                  sampling=SamplingParams(temperature=0.0))
+    r1 = SpecReason(base, small, SpecReasonConfig(**common)).run(
+        prompt, jax.random.PRNGKey(0))
+    r2 = SpecReason(base, small, SpecReasonConfig(
+        use_spec_decode=True, spec_gamma=3, **common)).run(
+        prompt, jax.random.PRNGKey(0))
+    assert r1.thinking_ids == r2.thinking_ids
+    assert r1.answer_ids == r2.answer_ids
+
+
+def test_all_schemes_produce_comparable_results(stack):
+    base, small, prompt = stack
+    key = jax.random.PRNGKey(5)
+    budget = 32
+    rv = vanilla_reason(base, prompt, key, token_budget=budget)
+    rs = vanilla_reason(small, prompt, key, token_budget=budget)
+    rd = spec_decode_reason(base, small, prompt, key, token_budget=budget)
+    rr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=budget)).run(prompt, key)
+    for r in (rv, rs, rd, rr):
+        assert r.n_thinking_tokens > 0
+        assert r.wall_time > 0

@@ -1,0 +1,110 @@
+"""Synthetic task family: generator/oracle correctness + hypothesis
+property tests on the system's task-level invariants."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import tasks
+from repro.data.evaluate import extract_answer, is_correct
+from repro.data.pipeline import BatchSpec, batch_iterator, pack
+from repro.tokenizer import toy as tk
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_task_values_mod100(seed):
+    t = tasks.sample_task(random.Random(seed))
+    assert all(0 <= v < 100 for v in t.values)
+    assert len(t.values) == len(t.ops) + 1
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from(["compact", "verbose"]))
+@settings(max_examples=50, deadline=None)
+def test_correct_steps_score_9_any_style(seed, style):
+    """Semantic equivalence: both phrasings of a correct step score 9 —
+    the paper's Fig 2 spectrum, encoded in the oracle."""
+    rng = random.Random(seed)
+    t = tasks.sample_task(rng)
+    vs = t.values
+    for i, (op, a) in enumerate(t.ops):
+        ids = tasks.step_tokens(vs[i], op, a, vs[i + 1], style)
+        assert tasks.oracle_score(t, i, ids) == 9
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_corrupted_steps_score_low(seed):
+    rng = random.Random(seed)
+    t = tasks.sample_task(rng)
+    i = rng.randrange(len(t.ops))
+    vs = t.values
+    wrong = (vs[i + 1] + 37) % 100
+    ids = tasks.step_tokens(vs[i], t.ops[i][0], t.ops[i][1], wrong,
+                            "compact")
+    assert tasks.oracle_score(t, i, ids) <= 4
+
+
+def test_parse_step_roundtrip():
+    for style in ("compact", "verbose"):
+        ids = tasks.step_tokens(12, "times", 3, 36, style)
+        assert tasks.parse_step(ids) == (12, "times", 3, 36)
+    assert tasks.parse_step(tk.encode(["wait", "hmm"])) is None
+
+
+def test_cot_example_and_answer_extraction():
+    rng = random.Random(0)
+    ex = tasks.cot_example(rng, (0.9, 0.05))
+    assert len(ex.tokens) == len(ex.loss_mask)
+    assert tk.ANSWER in ex.tokens
+    t_ids = ex.tokens
+    # the answer encoded in the example extracts correctly
+    ans = extract_answer(t_ids)
+    assert ans is not None and 0 <= ans < 100
+
+
+def test_score_example_loss_mask():
+    """Score supervision puts (upweighted) loss ONLY on the final digit."""
+    rng = random.Random(1)
+    ex = tasks.score_example(rng)
+    assert sum(1 for w in ex.loss_mask if w > 0) == 1
+    assert ex.loss_mask[-1] > 1  # upweighted vs ordinary CoT tokens
+    assert ex.tokens[-2] == tk.SCORE
+    assert ex.tokens[-1] in tk.DIGIT_IDS
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_oracle_vs_corrupt_consistency(seed):
+    """corrupt_step's reported score always equals oracle_score of its own
+    output (the PRM analog is self-consistent)."""
+    rng = random.Random(seed)
+    t = tasks.sample_task(rng)
+    i = rng.randrange(len(t.ops))
+    ids, score = tasks.corrupt_step(rng, t, i, "compact")
+    assert tasks.oracle_score(t, i, ids) == score
+
+
+def test_pack_shapes_and_shift():
+    rng = random.Random(2)
+    ex = tasks.cot_example(rng, (1.0, 0.0))
+    inp, tgt, wgt = pack(ex, 64)
+    assert inp.shape == tgt.shape == wgt.shape == (64,)
+    n = min(len(ex.tokens) - 1, 64)
+    assert (inp[:n] == ex.tokens[:n]).all()
+    assert (tgt[:n] == ex.tokens[1:n + 1]).all()
+
+
+def test_batch_iterator_shapes():
+    it = batch_iterator(BatchSpec(4, 64), seed=0)
+    inp, tgt, wgt = next(it)
+    assert inp.shape == (4, 64) and tgt.shape == (4, 64)
+    assert wgt.sum() > 0
+
+
+def test_is_correct():
+    t = tasks.Task(start=10, ops=[("plus", 5)])
+    good = tk.encode(["<answer>"]) + tk.num_ids(15) + [tk.EOS]
+    bad = tk.encode(["<answer>"]) + tk.num_ids(16) + [tk.EOS]
+    assert is_correct(t, good) and not is_correct(t, bad)
