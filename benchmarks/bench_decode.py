@@ -1,0 +1,112 @@
+"""Decode-loop microbenchmark: eager per-token loop vs the fused on-device
+``jax.lax.while_loop`` (tokens/s) on the toy testbed model pair.
+
+This is the measurement behind the fused-decode tentpole: the eager loop
+pays a host round-trip per token (jit dispatch + block + host sample + host
+key split), the fused loop pays one dispatch per *call* — so the ratio is
+the per-token dispatch overhead every downstream figure used to measure.
+
+Three models are benched: the trained testbed pair (base, small) and the
+``testbed-micro`` dispatch-bound probe.  The micro row is the headline
+``speedup``: its per-token compute is negligible, so fused/eager there IS
+the decode-loop overhead ratio — the regime the paper's accelerators are
+in for both models.  The pair's rows additionally show where the host the
+bench runs on becomes compute-bound (on a slow emulated CPU the base
+model's matmuls alone can exceed the dispatch overhead, capping its
+end-to-end ratio at 1 + overhead/compute; that cap is a property of the
+host, not of the decode loop).
+
+  PYTHONPATH=src python benchmarks/bench_decode.py
+  PYTHONPATH=src python benchmarks/bench_decode.py --tokens 64 --reps 2
+
+Emits BENCH_decode.json (repo root by default) with tokens/s for both
+paths per model plus the headline decode-loop ``speedup``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import testbed
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.tokenizer import toy as tk
+
+
+def _mk_engine(cfg, seed: int, max_len: int) -> Engine:
+    model = Model(cfg)
+    return Engine(model, model.init(jax.random.PRNGKey(seed)),
+                  max_len=max_len, name=cfg.name)
+
+
+def _bench_path(eng: Engine, fused: bool, tokens: int, reps: int,
+                sp: SamplingParams) -> float:
+    """Best-of-reps decode throughput (tokens/s) for one loop flavor.
+    Weights are random — throughput does not depend on them — and stop ids
+    are empty so every rep decodes the full budget."""
+    prompt = [tk.BOS, tk.THINK] + tk.num_ids(42)
+    best = float("inf")
+    for rep in range(reps + 1):           # rep 0 = compile warmup
+        sess = eng.extend(eng.new_session(), prompt)
+        key = jax.random.PRNGKey(rep)
+        t0 = time.perf_counter()
+        ids, _, _ = eng.generate(sess, tokens, [], sp, key, fused=fused)
+        dt = time.perf_counter() - t0
+        assert len(ids) == tokens
+        if rep > 0:
+            best = min(best, dt)
+    return tokens / best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=128,
+                    help="decode budget per timed call")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--temperature", type=float, default=0.6)
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args(argv)
+    if args.tokens < 1 or args.reps < 1:
+        ap.error("--tokens and --reps must be >= 1")
+
+    sp = SamplingParams(temperature=args.temperature)
+    max_len = args.tokens + 16
+    rows = {}
+    for cfg, seed in ((testbed.BASE, 0), (testbed.SMALL, 1),
+                      (testbed.MICRO, 2)):
+        eng = _mk_engine(cfg, seed, max_len)
+        eager = _bench_path(eng, False, args.tokens, args.reps, sp)
+        fused = _bench_path(eng, True, args.tokens, args.reps, sp)
+        rows[cfg.name] = {
+            "eager_tok_s": round(eager, 2),
+            "fused_tok_s": round(fused, 2),
+            "speedup": round(fused / eager, 2),
+        }
+        print(f"{cfg.name:14s} eager {eager:8.1f} tok/s   "
+              f"fused {fused:8.1f} tok/s   speedup {fused / eager:5.1f}x")
+
+    out = {
+        "bench": "decode_loop",
+        "tokens": args.tokens,
+        "reps": args.reps,
+        "temperature": args.temperature,
+        "backend": jax.default_backend(),
+        "models": rows,
+        # the decode-loop overhead ratio, measured where model compute is
+        # negligible (testbed-micro); pair rows may be compute-bound on
+        # slow hosts — see module docstring
+        "speedup": rows[testbed.MICRO.name]["speedup"],
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} (decode-loop speedup "
+          f"{out['speedup']:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

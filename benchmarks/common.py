@@ -82,14 +82,25 @@ def engines(ckpt_dir: str = "exp/ckpt"):
 
 
 def _warmup(eng) -> None:
-    """Pre-compile the bucketed prefill shapes + the decode step so compile
+    """Pre-compile the bucketed prefill shapes, the decode step, and the
+    fused decode programs for the buffer sizes the schemes use, so compile
     time never pollutes latency measurements."""
+    import jax
+    from repro.sampling.sample import SamplingParams
     from repro.tokenizer import toy as tk
     s = eng.new_session()
     s = eng.extend(s, [tk.BOS])           # bucket 4
     for b in (8, 16, 32, 64):
         s2 = eng.extend(s, [tk.BOS] * (b - 1))
     eng.decode_one(s, tk.BOS)
+    # fused-loop buffers: answers (8), late-budget steps (16), step drafts
+    # (<=32), full budgets (256), and the collect_probs variant
+    # spec-decode's gamma drafts use
+    sp = SamplingParams(temperature=DEFAULT_TEMP)
+    key = jax.random.PRNGKey(0)
+    for budget in (8, 16, 32, 256):
+        eng.generate_fused(s, budget, [tk.EOS], sp, key)
+    eng.generate_fused(s, 4, [], sp, key, collect_probs=True)
     eng.meter.reset()
 
 

@@ -2,6 +2,10 @@
 reasoning requests served with SpecReason on the TRAINED testbed pair,
 comparing all five schemes from the paper's Fig 3.
 
+Decoding runs through the engines' fused on-device loop and the per-engine
+meter breakdown is printed per request (add ``--decode-loop eager`` to see
+how much of the latency the fused loop removes).
+
   PYTHONPATH=src python examples/serve_specreason.py -n 6
 """
 
@@ -10,6 +14,9 @@ import sys
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--scheme", "all",
-                *sys.argv[1:]] if "--scheme" not in sys.argv else sys.argv
-    main()
+    argv = sys.argv[1:]
+    if "--scheme" not in argv:
+        argv = ["--scheme", "all", *argv]
+    if "--meters" not in argv:
+        argv = ["--meters", *argv]
+    main(argv)

@@ -30,3 +30,22 @@ SMALL = ModelConfig(
     vocab_size=tk.VOCAB_SIZE,
     max_position_embeddings=2048,
 ).validate()
+
+# Dispatch-bound decode probe: a drafter so small that per-token model
+# compute is negligible next to per-token host/dispatch overhead on any
+# host — the regime the paper's accelerators are in for BOTH models.  The
+# decode microbenchmark (benchmarks/bench_decode.py) uses it to isolate
+# the decode-loop overhead that the fused while_loop removes; at micro
+# scale the fused/eager ratio IS the loop-overhead ratio.  (On a slow
+# emulated CPU the trained pair above can be compute-bound, which caps
+# their end-to-end fused speedup at 1 + overhead/compute.)
+MICRO = ModelConfig(
+    name="testbed-micro",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128,
+    vocab_size=tk.VOCAB_SIZE,
+    max_position_embeddings=2048,
+).validate()

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 
@@ -34,21 +34,27 @@ def _finish(thinking: List[int], answer: List[int], t0: float, meters,
 def vanilla_reason(engine: Engine, prompt_ids: Sequence[int], key: jax.Array,
                    token_budget: int = 256,
                    sampling: SamplingParams = SamplingParams(temperature=0.6),
-                   answer_max_tokens: int = 8) -> SpecReasonResult:
-    """Plain autoregressive LRM inference (base-model or small-model)."""
+                   answer_max_tokens: int = 8,
+                   fused: Optional[bool] = None) -> SpecReasonResult:
+    """Plain autoregressive LRM inference (base-model or small-model).
+
+    ``fused`` picks the decode loop (None = engine default, i.e. the fused
+    on-device while_loop): the whole thinking phase is then ONE device
+    call, which is what makes this latency reference meaningful rather
+    than a measurement of per-token dispatch overhead."""
     engine.meter.reset()
     t0 = time.perf_counter()
     sess = engine.extend(engine.new_session(), list(prompt_ids))
     key, k1 = jax.random.split(key)
     thinking, sess, _ = engine.generate(sess, token_budget, [tk.THINK_END,
                                                              tk.EOS],
-                                        sampling, k1)
+                                        sampling, k1, fused=fused)
     if not thinking or thinking[-1] != tk.THINK_END:
         sess = engine.extend(sess, [tk.THINK_END])
         thinking = thinking + [tk.THINK_END]
     key, k2 = jax.random.split(key)
     answer, sess, _ = engine.generate(sess, answer_max_tokens, [tk.EOS],
-                                      sampling, k2)
+                                      sampling, k2, fused=fused)
     return _finish(thinking, answer, t0,
                    {engine.name or "engine": engine.meter.as_dict()},
                    source=engine.name or "base")
@@ -60,7 +66,8 @@ def spec_decode_reason(base: Engine, small: Engine,
                        sampling: SamplingParams = SamplingParams(
                            temperature=0.6),
                        gamma: int = 4,
-                       answer_max_tokens: int = 8) -> SpecReasonResult:
+                       answer_max_tokens: int = 8,
+                       fused: Optional[bool] = None) -> SpecReasonResult:
     """Pure token-level speculative decoding over the whole generation —
     the paper's "SpecDecode" baseline (exact w.r.t. the base model)."""
     base.meter.reset()
@@ -72,7 +79,7 @@ def spec_decode_reason(base: Engine, small: Engine,
     key, k1 = jax.random.split(key)
     thinking, b, s = spec_decode(base, small, b, s, token_budget,
                                  [tk.THINK_END, tk.EOS], sampling, k1,
-                                 gamma=gamma, stats=stats)
+                                 gamma=gamma, stats=stats, fused=fused)
     if not thinking or thinking[-1] != tk.THINK_END:
         b = base.extend(b, [tk.THINK_END])
         s = small.extend(s, [tk.THINK_END])
@@ -80,7 +87,7 @@ def spec_decode_reason(base: Engine, small: Engine,
     key, k2 = jax.random.split(key)
     answer, b, s = spec_decode(base, small, b, s, answer_max_tokens,
                                [tk.EOS], sampling, k2, gamma=gamma,
-                               stats=stats)
+                               stats=stats, fused=fused)
     return _finish(thinking, answer, t0,
                    {"base": base.meter.as_dict(),
                     "small": small.meter.as_dict()}, stats)

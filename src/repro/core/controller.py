@@ -53,6 +53,9 @@ class SpecReasonConfig:
     # overlap-eligible seconds (SpecReasonResult.overlapped_s) so the
     # benches can report pipelined critical-path latency.
     overlapped: bool = False
+    # decode loop: fused on-device while_loop (default) or the eager
+    # per-token reference loop (debugging / metering-per-token)
+    fused_decode: bool = True
     # sampling
     sampling: SamplingParams = dataclasses.field(
         default_factory=lambda: SamplingParams(temperature=0.6))
@@ -152,9 +155,10 @@ class SpecReason:
                     pending = None
                     small_sess = small_after
                 else:
+                    # one fused device call drafts the whole step
                     ids, small_sess, _ = self.small.generate(
                         small_sess, max_step, self.segmenter.stop_ids,
-                        cfg.sampling, k1)
+                        cfg.sampling, k1, fused=cfg.fused_decode)
                 end = self.segmenter.classify_end(ids)
                 body = self.segmenter.body(ids)
 
@@ -165,12 +169,17 @@ class SpecReason:
                     t_ov = time.perf_counter()
                     nids, nsess, _ = self.small.generate(
                         small_sess, self.segmenter.cfg.max_step_tokens,
-                        self.segmenter.stop_ids, cfg.sampling, k1b)
+                        self.segmenter.stop_ids, cfg.sampling, k1b,
+                        fused=cfg.fused_decode)
                     overlapped_s += time.perf_counter() - t_ov
                     pending = (nids, nsess)
 
-                if body and end in ("step", "final"):
-                    delim = tk.STEP if end == "step" else tk.THINK_END
+                # A draft that hits max_step_tokens ("runaway") is a step
+                # the segmenter's cap forcibly closed — verify it like a
+                # clean <step> boundary (the cap exists so a rambling
+                # speculator cannot stall verification, segmenter.py).
+                if body and end in ("step", "final", "runaway"):
+                    delim = tk.THINK_END if end == "final" else tk.STEP
                     vr = self.verifier.verify(base_sess, body, delim)
                     utility = vr.utility
                     if isinstance(cfg.policy, LogprobMargin):
@@ -197,7 +206,8 @@ class SpecReason:
                     pending = None
                     steps.append(StepRecord("small", utility, False, body))
                 else:
-                    # malformed speculation (runaway / eos): treat as reject
+                    # malformed speculation (empty body / eos mid-thought):
+                    # treat as reject
                     small_sess = s_snap
                     base_sess = b_snap
                     pending = None
@@ -209,11 +219,12 @@ class SpecReason:
                 ids, base_sess, small_sess = spec_decode(
                     self.base, self.small, base_sess, small_sess,
                     max_step, self.segmenter.stop_ids, cfg.sampling, k2,
-                    gamma=cfg.spec_gamma, stats=spec_stats)
+                    gamma=cfg.spec_gamma, stats=spec_stats,
+                    fused=cfg.fused_decode)
             else:
                 ids, base_sess, _ = self.base.generate(
                     base_sess, max_step, self.segmenter.stop_ids,
-                    cfg.sampling, k2)
+                    cfg.sampling, k2, fused=cfg.fused_decode)
                 # keep the small model's context in sync
                 small_sess = self.small.extend(small_sess, ids)
             end = self.segmenter.classify_end(ids)
@@ -239,10 +250,12 @@ class SpecReason:
             answer_ids, base_sess, small_sess = spec_decode(
                 self.base, self.small, base_sess, small_sess,
                 cfg.answer_max_tokens, [tk.EOS], cfg.sampling, k3,
-                gamma=cfg.spec_gamma, stats=spec_stats)
+                gamma=cfg.spec_gamma, stats=spec_stats,
+                fused=cfg.fused_decode)
         else:
             answer_ids, base_sess, _ = self.base.generate(
-                base_sess, cfg.answer_max_tokens, [tk.EOS], cfg.sampling, k3)
+                base_sess, cfg.answer_max_tokens, [tk.EOS], cfg.sampling,
+                k3, fused=cfg.fused_decode)
 
         wall = time.perf_counter() - t0
         return SpecReasonResult(

@@ -9,7 +9,12 @@ rule, preserving the base model's output distribution exactly (property-
 tested in tests/test_spec_decode.py).
 
 Both engines' contexts are kept in sync via snapshot/replay rollback, so
-the routine works for any model family (attention, SSM, hybrid)."""
+the routine works for any model family (attention, SSM, hybrid).
+
+With the engine's fused decode loop (the default) the draft model's
+gamma-token proposal — sampling, stop/budget bookkeeping and the proposal
+distributions needed by the rejection rule — runs as a single on-device
+program with one host sync (see DESIGN.md §Fused decode loop)."""
 
 from __future__ import annotations
 
@@ -44,13 +49,20 @@ def spec_decode(base: Engine, draft: Engine, base_sess: Session,
                 draft_sess: Session, max_tokens: int,
                 stop_ids: Sequence[int], params: SamplingParams,
                 key: jax.Array, gamma: int = 4,
-                stats: Optional[SpecDecodeStats] = None
+                stats: Optional[SpecDecodeStats] = None,
+                fused: Optional[bool] = None
                 ) -> Tuple[List[int], Session, Session]:
     """Generate up to ``max_tokens`` tokens of the *base* model's
     distribution, accelerated by the draft model.
 
     Both sessions must be positioned at the same context.  Returns
-    (generated ids incl. stop token, base session, draft session)."""
+    (generated ids incl. stop token, base session, draft session).
+
+    ``fused`` selects the draft model's decode loop (None = the draft
+    engine's default): with the fused path the whole gamma-token proposal,
+    including its per-token proposal distributions, is ONE device call —
+    so a round costs one draft dispatch + one base verification prefill
+    instead of 3*gamma host round-trips."""
     stop = set(int(s) for s in stop_ids)
     out: List[int] = []
     stats = stats if stats is not None else SpecDecodeStats()
@@ -61,7 +73,7 @@ def spec_decode(base: Engine, draft: Engine, base_sess: Session,
         d_snap = draft_sess.snapshot()
         draft_ids, draft_sess, draft_probs = draft.generate(
             draft_sess, g, stop_ids=(), params=params, key=key,
-            collect_probs=True)
+            collect_probs=True, fused=fused)
         key, _ = jax.random.split(key)
         stats.proposed += len(draft_ids)
         stats.rounds += 1

@@ -2,8 +2,14 @@
 serve a batch of reasoning requests through SpecReason on the trained toy
 testbed pair, printing per-request latency/accuracy and aggregate stats.
 
+All schemes decode through the engines' fused on-device loop by default
+(one jitted while_loop per generate call, see DESIGN.md); pass
+``--decode-loop eager`` to fall back to the per-token reference loop and
+see how much of the "latency" is pure host dispatch.
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
+  PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
 """
 
 from __future__ import annotations
@@ -27,19 +33,29 @@ SCHEMES = ("base", "small", "specdecode", "specreason", "specreason+decode")
 
 
 def run_scheme(scheme: str, base, small, task, key, budget: int,
-               threshold: float, temperature: float):
+               threshold: float, temperature: float, fused: bool = True):
     prompt = tasks.question_tokens(task)
     sp = SamplingParams(temperature=temperature)
     if scheme == "base":
-        return vanilla_reason(base, prompt, key, budget, sp)
+        return vanilla_reason(base, prompt, key, budget, sp, fused=fused)
     if scheme == "small":
-        return vanilla_reason(small, prompt, key, budget, sp)
+        return vanilla_reason(small, prompt, key, budget, sp, fused=fused)
     if scheme == "specdecode":
-        return spec_decode_reason(base, small, prompt, key, budget, sp)
+        return spec_decode_reason(base, small, prompt, key, budget, sp,
+                                  fused=fused)
     cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
                            token_budget=budget, sampling=sp,
-                           use_spec_decode=(scheme == "specreason+decode"))
+                           use_spec_decode=(scheme == "specreason+decode"),
+                           fused_decode=fused)
     return SpecReason(base, small, cfg).run(prompt, key)
+
+
+def _meter_line(name: str, m: dict) -> str:
+    dt, dc = m.get("decode_tokens", 0), m.get("decode_calls", 0)
+    tok_s = dt / m["decode_time"] if m.get("decode_time") else 0.0
+    return (f"    {name}: decode {dt} tok / {dc} calls "
+            f"({tok_s:.0f} tok/s), prefill {m.get('prefill_tokens', 0)} tok "
+            f"/ {m.get('prefill_calls', 0)} calls")
 
 
 def main(argv=None):
@@ -52,8 +68,15 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.6)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="exp/ckpt")
+    ap.add_argument("--decode-loop", choices=("fused", "eager"),
+                    default="fused",
+                    help="fused = one jitted while_loop per generate call "
+                         "(default); eager = per-token reference loop")
+    ap.add_argument("--meters", action="store_true",
+                    help="print the per-engine meter breakdown per request")
     args = ap.parse_args(argv)
 
+    fused = args.decode_loop == "fused"
     base, small = load_testbed_engines(args.ckpt_dir)
     rng = random.Random(args.seed)
     reqs = [tasks.sample_task(rng) for _ in range(args.num_requests)]
@@ -64,7 +87,7 @@ def main(argv=None):
         for i, task in enumerate(reqs):
             key = jax.random.PRNGKey(1000 * args.seed + i)
             res = run_scheme(scheme, base, small, task, key, args.budget,
-                             args.threshold, args.temperature)
+                             args.threshold, args.temperature, fused=fused)
             ok = is_correct(task, res.answer_ids)
             lat.append(res.wall_time)
             acc.append(ok)
@@ -72,8 +95,12 @@ def main(argv=None):
             print(f"[{scheme}] req{i}: {'OK ' if ok else 'BAD'} "
                   f"{res.wall_time:.2f}s think={res.n_thinking_tokens} "
                   f"answer={tk.detok(res.answer_ids)}")
+            if args.meters:
+                for name, m in res.meters.items():
+                    print(_meter_line(name, m))
         print(json.dumps({
             "scheme": scheme,
+            "decode_loop": args.decode_loop,
             "mean_latency_s": sum(lat) / len(lat),
             "accuracy": sum(acc) / len(acc),
             "mean_thinking_tokens": sum(toks) / len(toks),

@@ -48,7 +48,13 @@ def probs_from_logits(logits: jax.Array, params: SamplingParams) -> jax.Array:
 
 def sample(logits: jax.Array, params: SamplingParams,
            key: Optional[jax.Array]) -> jax.Array:
-    """logits (..., V) -> token ids (...)."""
+    """logits (..., V) -> token ids (...).
+
+    While-loop-safe: ``params`` is a static (hashable) dataclass, so every
+    branch here is resolved at trace time — the function can be called from
+    inside a jitted ``jax.lax.while_loop`` body (the engine's fused decode
+    loop) with traced ``logits``/``key`` and never branches on traced
+    values."""
     if params.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     adj = adjust_logits(logits, params)

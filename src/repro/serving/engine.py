@@ -15,15 +15,25 @@ Key properties:
   * every Session keeps ``last_logits`` so speculative decoding can verify
     gamma draft tokens with exactly one extend (gamma+1 usable
     distributions) — the chunked-prefill verification of the paper.
+  * ``generate`` runs the WHOLE autoregressive loop as one jitted
+    ``jax.lax.while_loop`` program: decode_step + logit adjustment +
+    sampling + stop/budget detection are fused on-device, tokens land in a
+    preallocated buffer, and there is exactly ONE host sync per call (see
+    DESIGN.md §Fused decode loop).  The per-token eager loop survives as
+    ``generate_eager`` — the reference implementation for tests and the
+    slow path for debugging.
   * all ops are metered (wall time + token counts) for the latency
-    attribution used by the benchmarks.
+    attribution used by the benchmarks; a fused call is one timed op whose
+    per-token attribution comes from the device-reported ``n_generated``
+    (DESIGN.md §Metering contract).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import typing
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +41,13 @@ import numpy as np
 
 from ..models.kvcache import DecodeState
 from ..models.model import Model
-from ..sampling.sample import SamplingParams, adjust_logits, sample
+from ..sampling.sample import SamplingParams, probs_from_logits, sample
 
 DEFAULT_BUCKETS = (4, 8, 16, 32, 64, 128, 256)
+
+# Stop-id vectors are padded to a multiple of this so the number of stop
+# tokens does not create new compiled shapes for the fused decode program.
+_STOP_SLOTS = 4
 
 
 @dataclasses.dataclass
@@ -54,20 +68,26 @@ class Meter:
     prefill_calls: int = 0
     prefill_time: float = 0.0
     decode_tokens: int = 0
+    decode_calls: int = 0
     decode_time: float = 0.0
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
     def reset(self) -> None:
+        # NB: with ``from __future__ import annotations`` every f.type is a
+        # *string*, so the old ``f.type is int`` check silently reset int
+        # counters to floats.  Resolve the real types instead (regression
+        # test: tests/test_engine.py::test_meter_reset_preserves_int_types).
+        hints = typing.get_type_hints(type(self))
         for f in dataclasses.fields(self):
-            setattr(self, f.name, 0 if f.type is int else 0.0)
+            setattr(self, f.name, hints[f.name]())
 
 
 class Engine:
     def __init__(self, model: Model, params, max_len: int = 1024,
                  buckets: Sequence[int] = DEFAULT_BUCKETS, name: str = "",
-                 pad_id: int = 0):
+                 pad_id: int = 0, fused: bool = True):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -78,6 +98,10 @@ class Engine:
         # but would pollute an SSM's recurrent state -> exact-length extends
         # (at the cost of more compiled shapes) for ssm/hybrid families.
         self.exact_lengths = model.cfg.has_ssm
+        # Default decode path: the fused on-device while_loop.  Flip to
+        # False (or pass fused=False per generate call) for the eager
+        # per-token reference loop.
+        self.fused = fused
         self.meter = Meter()
         # NOTE: no buffer donation here — SpecReason's snapshot/rollback
         # keeps references to earlier states, which donation would
@@ -85,6 +109,9 @@ class Engine:
         # copy-on-snapshot at step boundaries; see DESIGN.md.)
         self._prefill_jit = jax.jit(model.prefill)
         self._decode_jit = jax.jit(model.decode_step)
+        # (buf_size, SamplingParams, collect_probs) -> compiled fused loop
+        self._fused_cache: Dict[Tuple[int, SamplingParams, bool],
+                                Callable] = {}
 
     # ------------------------------------------------------------------ api
     def new_session(self, batch: int = 1, capacity: Optional[int] = None,
@@ -106,12 +133,13 @@ class Engine:
         raise ValueError(f"extend of {n} tokens exceeds bucket max "
                          f"{self.buckets[-1]}")
 
-    def extend(self, session: Session, ids: Sequence[int]) -> Session:
-        """Append tokens to the context (chunked prefill).  Returns a new
-        Session whose last_logits follow the final real token."""
+    def _prefill_padded(self, session: Session, ids: Sequence[int]
+                        ) -> Tuple[jax.Array, DecodeState]:
+        """Shared extend/extend_logits core: bucket-pad, run the jitted
+        prefill, meter it, and fix up the padded position advance.  Returns
+        the (B, bucket, V) logits and the new state (pos corrected to the
+        unpadded length)."""
         n = len(ids)
-        if n == 0:
-            return session
         if session.state.k is not None and \
                 session.pos + n > session.state.capacity:
             # SSM-only states have no positional capacity (constant size)
@@ -130,6 +158,15 @@ class Engine:
         # state.pos advanced by the padded amount — correct it
         new_state = dataclasses.replace(
             new_state, pos=jnp.asarray(session.pos + n, jnp.int32))
+        return logits, new_state
+
+    def extend(self, session: Session, ids: Sequence[int]) -> Session:
+        """Append tokens to the context (chunked prefill).  Returns a new
+        Session whose last_logits follow the final real token."""
+        n = len(ids)
+        if n == 0:
+            return session
+        logits, new_state = self._prefill_padded(session, ids)
         return Session(new_state, logits[:, n - 1, :], session.pos + n)
 
     def extend_logits(self, session: Session, ids: Sequence[int]
@@ -137,18 +174,7 @@ class Engine:
         """Like extend, but also returns the (n, V) logits at every position
         of ``ids`` (used by spec-decode verification and scoring)."""
         n = len(ids)
-        b = self._bucket(n)
-        padded = list(ids) + [self.pad_id] * (b - n)
-        toks = jnp.asarray(padded, jnp.int32)[None, :]
-        t0 = time.perf_counter()
-        logits, new_state = self._prefill_jit(self.params, toks,
-                                              session.state)
-        logits = jax.block_until_ready(logits)
-        self.meter.prefill_time += time.perf_counter() - t0
-        self.meter.prefill_tokens += b
-        self.meter.prefill_calls += 1
-        new_state = dataclasses.replace(
-            new_state, pos=jnp.asarray(session.pos + n, jnp.int32))
+        logits, new_state = self._prefill_padded(session, ids)
         return logits[0, :n, :], Session(new_state, logits[:, n - 1, :],
                                          session.pos + n)
 
@@ -160,15 +186,36 @@ class Engine:
         logits = jax.block_until_ready(logits)
         self.meter.decode_time += time.perf_counter() - t0
         self.meter.decode_tokens += 1
+        self.meter.decode_calls += 1
         return Session(new_state, logits, session.pos + 1)
 
+    # ------------------------------------------------------------ generate
     def generate(self, session: Session, max_tokens: int,
                  stop_ids: Sequence[int], params: SamplingParams,
-                 key: jax.Array, collect_probs: bool = False
+                 key: jax.Array, collect_probs: bool = False,
+                 fused: Optional[bool] = None
                  ) -> Tuple[List[int], Session, List[np.ndarray]]:
         """Autoregressively sample from last_logits until a stop id or the
         budget; generated ids (stop id included if hit) are fed back into
-        the context.  Returns (ids, session, per-step probs if requested)."""
+        the context.  Returns (ids, session, per-step probs if requested).
+
+        Dispatches to the fused on-device loop (default) or the eager
+        per-token reference loop (``fused=False`` / engine default)."""
+        use_fused = self.fused if fused is None else fused
+        if use_fused:
+            return self.generate_fused(session, max_tokens, stop_ids,
+                                       params, key, collect_probs)
+        return self.generate_eager(session, max_tokens, stop_ids, params,
+                                   key, collect_probs)
+
+    def generate_eager(self, session: Session, max_tokens: int,
+                       stop_ids: Sequence[int], params: SamplingParams,
+                       key: jax.Array, collect_probs: bool = False
+                       ) -> Tuple[List[int], Session, List[np.ndarray]]:
+        """Reference decode loop: one jit dispatch + host sync + host-side
+        sample per token.  Kept as the semantic specification of
+        ``generate_fused`` (tests assert token-for-token equivalence) and
+        as a debugging slow path."""
         assert session.last_logits is not None, "prefill before generate"
         out: List[int] = []
         probs_list: List[np.ndarray] = []
@@ -178,19 +225,119 @@ class Engine:
             logits = session.last_logits[0]
             tok = int(sample(logits, params, sub))
             if collect_probs:
-                if params.temperature <= 0:
-                    pr = np.zeros(logits.shape[-1], np.float32)
-                    pr[tok] = 1.0
-                else:
-                    pr = np.asarray(jax.nn.softmax(
-                        adjust_logits(logits, params), axis=-1),
-                        np.float32)
-                probs_list.append(pr)
+                probs_list.append(np.asarray(
+                    probs_from_logits(logits, params), np.float32))
             out.append(tok)
             session = self.decode_one(session, tok)
             if tok in stop:
                 break
         return out, session, probs_list
+
+    def _decode_buf(self, max_tokens: int) -> int:
+        """Token-buffer bucket for the fused loop: next power of two, so
+        varying budgets reuse a handful of compiled programs (the loop
+        itself trips on the *dynamic* budget, not the buffer size)."""
+        b = 8
+        while b < max_tokens:
+            b *= 2
+        return b
+
+    def _fused_decode_fn(self, buf: int, sp: SamplingParams,
+                         collect_probs: bool) -> Callable:
+        """Build (or fetch) the jitted fused decode program for one
+        (buffer size, sampling params, collect_probs) combination.
+
+        The program is a single ``jax.lax.while_loop`` whose body fuses
+        decode_step + logit adjustment + sampling + stop detection; the
+        trip count is bounded by the *dynamic* ``n_max`` operand so one
+        compilation serves every budget <= buf.  PRNG keys are split
+        on-device inside the loop carry — in the same order as the eager
+        loop, so sampled output is reproducible across both paths."""
+        cache_key = (buf, sp, collect_probs)
+        fn = self._fused_cache.get(cache_key)
+        if fn is not None:
+            return fn
+        model = self.model
+
+        def fused(params, state: DecodeState, last_logits, rng, stop_arr,
+                  n_max):
+            vocab = last_logits.shape[-1]
+            toks0 = jnp.full((buf,), -1, jnp.int32)
+            probs0 = (jnp.zeros((buf, vocab), jnp.float32) if collect_probs
+                      else jnp.zeros((0, 0), jnp.float32))
+
+            def cond(carry):
+                i, done = carry[0], carry[1]
+                return jnp.logical_and(i < n_max, jnp.logical_not(done))
+
+            def body(carry):
+                i, done, state, logits, rng, toks, probs = carry
+                rng, sub = jax.random.split(rng)
+                row = logits[0]
+                tok = sample(row, sp, sub).astype(jnp.int32)
+                if collect_probs:
+                    probs = probs.at[i].set(
+                        probs_from_logits(row, sp).astype(jnp.float32))
+                toks = toks.at[i].set(tok)
+                done = jnp.any(tok == stop_arr)
+                # the sampled token (stop id included) joins the context,
+                # matching generate_eager's decode-then-break order
+                new_logits, new_state = model.decode_step(
+                    params, state, tok[None, None])
+                return (i + 1, done, new_state, new_logits, rng, toks,
+                        probs)
+
+            init = (jnp.asarray(0, jnp.int32), jnp.asarray(False), state,
+                    last_logits, rng, toks0, probs0)
+            n, _, state, logits, _, toks, probs = jax.lax.while_loop(
+                cond, body, init)
+            return toks, n, logits, state, probs
+
+        fn = jax.jit(fused)
+        self._fused_cache[cache_key] = fn
+        return fn
+
+    def generate_fused(self, session: Session, max_tokens: int,
+                       stop_ids: Sequence[int], params: SamplingParams,
+                       key: jax.Array, collect_probs: bool = False
+                       ) -> Tuple[List[int], Session, List[np.ndarray]]:
+        """Fused decode: the whole sample->append->decode loop runs as ONE
+        jitted device program, with exactly one host sync per call (the
+        block on the finished token buffer).  Metered as a single timed op;
+        per-token attribution uses the device-reported count."""
+        assert session.last_logits is not None, "prefill before generate"
+        n_budget = max_tokens
+        if session.state.k is not None:
+            # never decode past the attention cache (the eager loop would
+            # silently wrap; here we clamp the budget up front)
+            n_budget = min(n_budget, session.state.capacity - session.pos)
+        if n_budget <= 0:
+            return [], session, []
+
+        buf = self._decode_buf(n_budget)
+        stop = sorted(set(int(s) for s in stop_ids))
+        n_slots = max(_STOP_SLOTS,
+                      -(-len(stop) // _STOP_SLOTS) * _STOP_SLOTS)
+        stop_arr = jnp.asarray(stop + [-1] * (n_slots - len(stop)),
+                               jnp.int32)
+        fn = self._fused_decode_fn(buf, params, collect_probs)
+
+        t0 = time.perf_counter()
+        toks, n, logits, new_state, probs = fn(
+            self.params, session.state, session.last_logits, key, stop_arr,
+            jnp.asarray(n_budget, jnp.int32))
+        toks = np.asarray(jax.block_until_ready(toks))   # the ONE host sync
+        n = int(n)
+        self.meter.decode_time += time.perf_counter() - t0
+        self.meter.decode_tokens += n
+        self.meter.decode_calls += 1
+
+        out = [int(t) for t in toks[:n]]
+        probs_list: List[np.ndarray] = []
+        if collect_probs:
+            probs_np = np.asarray(probs, np.float32)
+            probs_list = [probs_np[i] for i in range(n)]
+        return out, Session(new_state, logits, session.pos + n), probs_list
 
     # ---------------------------------------------------------------- util
     def rollback(self, session: Session, to: Session,
@@ -218,8 +365,7 @@ class Engine:
         recomputed (tested against extend-replay in tests/test_engine.py)."""
         assert self.can_truncate, "SSM states cannot be truncated"
         assert to_pos <= session.pos
-        import dataclasses as _dc
-        new_state = _dc.replace(session.state,
-                                pos=jnp.asarray(to_pos, jnp.int32))
+        new_state = dataclasses.replace(session.state,
+                                        pos=jnp.asarray(to_pos, jnp.int32))
         ll = last_logits if last_logits.ndim == 2 else last_logits[None]
         return Session(new_state, ll, to_pos)

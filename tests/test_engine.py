@@ -21,6 +21,8 @@ def _mk_engine(family="dense", **kw):
         base.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
     if family == "ssm":
         base.update(n_heads=1, n_kv_heads=1, d_ff=0)
+    if family == "moe":
+        base.update(n_experts=4, top_k=2)
     base.update(kw)
     cfg = ModelConfig(**base).validate()
     m = Model(cfg)
@@ -125,3 +127,148 @@ def test_truncate_refused_for_ssm():
     s = eng.extend(eng.new_session(), [tk.BOS])
     with pytest.raises(AssertionError):
         eng.truncate(s, 0, s.last_logits)
+
+
+# ------------------------------------------------------------------ meter
+
+
+def test_meter_reset_preserves_int_types():
+    """Regression: with ``from __future__ import annotations`` field types
+    are strings, so the old ``f.type is int`` check reset int counters to
+    0.0 floats."""
+    eng = _mk_engine("dense")
+    s = eng.extend(eng.new_session(), [tk.BOS, tk.THINK])
+    eng.decode_one(s, tk.STEP)
+    eng.meter.reset()
+    for name, val in eng.meter.as_dict().items():
+        if name.endswith("_time"):
+            assert type(val) is float, name
+        else:
+            assert type(val) is int, (name, val)
+        assert val == 0
+
+
+# ------------------------------------------------------- fused decode loop
+
+
+_PROMPT = [tk.BOS, tk.THINK] + tk.num_ids(42)
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
+def test_fused_matches_eager_greedy(family):
+    """Greedy fused decode is token-for-token identical to the eager
+    reference loop, and leaves the session in an equivalent state (SSM
+    families exercise the exact-length extend path for the prompt)."""
+    eng = _mk_engine(family)
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    sp = SamplingParams(temperature=0.0)
+    key = jax.random.PRNGKey(7)
+    e_ids, e_sess, _ = eng.generate_eager(s0, 20, [tk.EOS], sp, key)
+    f_ids, f_sess, _ = eng.generate_fused(s0, 20, [tk.EOS], sp, key)
+    assert f_ids == e_ids
+    assert f_sess.pos == e_sess.pos == s0.pos + len(e_ids)
+    np.testing.assert_allclose(np.asarray(f_sess.last_logits),
+                               np.asarray(e_sess.last_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+def test_fused_matches_eager_sampled(family):
+    """Sampled decode too: the fused loop splits PRNG keys on-device in
+    the same order as the eager loop, so the token stream is reproducible
+    across both paths."""
+    eng = _mk_engine(family)
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    sp = SamplingParams(temperature=0.8, top_k=20, top_p=0.95)
+    key = jax.random.PRNGKey(3)
+    e_ids, _, e_probs = eng.generate_eager(s0, 16, [tk.EOS], sp, key,
+                                           collect_probs=True)
+    f_ids, _, f_probs = eng.generate_fused(s0, 16, [tk.EOS], sp, key,
+                                           collect_probs=True)
+    assert f_ids == e_ids
+    assert len(f_probs) == len(e_probs) == len(f_ids)
+    for pe, pf in zip(e_probs, f_probs):
+        np.testing.assert_allclose(pf, pe, rtol=2e-4, atol=2e-5)
+
+
+def test_fused_stop_inside_buffer():
+    """A stop id hit before the budget ends the loop there; the stop token
+    is included in the output and in the context (matching eager)."""
+    eng = _mk_engine("dense")
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    sp = SamplingParams(temperature=0.0)
+    key = jax.random.PRNGKey(0)
+    free_ids, _, _ = eng.generate_eager(s0, 12, [], sp, key)
+    assert len(free_ids) == 12
+    stop_tok = free_ids[5]
+    k = free_ids.index(stop_tok)          # first occurrence
+    f_ids, f_sess, _ = eng.generate_fused(s0, 12, [stop_tok], sp, key)
+    assert f_ids == free_ids[:k + 1]
+    assert f_ids[-1] == stop_tok
+    assert f_sess.pos == s0.pos + k + 1
+
+
+def test_fused_zero_budget():
+    eng = _mk_engine("dense")
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    sp = SamplingParams(temperature=0.0)
+    ids, sess, probs = eng.generate_fused(s0, 0, [tk.EOS], sp,
+                                          jax.random.PRNGKey(0))
+    assert ids == [] and probs == []
+    assert sess.pos == s0.pos
+    assert eng.meter.decode_calls == 0
+
+
+def test_fused_immediate_stop():
+    """First sampled token is a stop id -> exactly one token, fed into the
+    context, and the session remains usable."""
+    eng = _mk_engine("dense")
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    sp = SamplingParams(temperature=0.0)
+    key = jax.random.PRNGKey(0)
+    first, _, _ = eng.generate_eager(s0, 1, [], sp, key)
+    ids, sess, _ = eng.generate_fused(s0, 8, [first[0]], sp, key)
+    assert ids == first
+    assert sess.pos == s0.pos + 1
+    # the session continues cleanly after an immediate stop
+    more = eng.extend(sess, [tk.STEP])
+    assert more.pos == sess.pos + 1
+
+
+def test_fused_metering_one_call():
+    """A fused generate is ONE metered decode op whose token attribution
+    comes from the device-reported count (DESIGN.md §Metering contract)."""
+    eng = _mk_engine("dense")
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    eng.meter.reset()
+    ids, _, _ = eng.generate_fused(s0, 10, [], SamplingParams(),
+                                   jax.random.PRNGKey(0))
+    assert eng.meter.decode_calls == 1
+    assert eng.meter.decode_tokens == len(ids) == 10
+    assert eng.meter.decode_time > 0
+
+
+def test_generate_dispatch_respects_engine_flag():
+    """generate() follows the engine default unless overridden per call;
+    the eager path meters one decode call per token."""
+    eng = _mk_engine("dense")
+    s0 = eng.extend(eng.new_session(), _PROMPT)
+    eng.meter.reset()
+    eng.fused = False
+    ids, _, _ = eng.generate(s0, 4, [], SamplingParams(),
+                             jax.random.PRNGKey(0))
+    assert eng.meter.decode_calls == len(ids) == 4
+    eng.meter.reset()
+    ids, _, _ = eng.generate(s0, 4, [], SamplingParams(),
+                             jax.random.PRNGKey(0), fused=True)
+    assert eng.meter.decode_calls == 1
+
+
+def test_fused_budget_clamped_to_capacity():
+    """The fused loop never decodes past the attention cache capacity."""
+    eng = _mk_engine("dense")
+    s0 = eng.extend(eng.new_session(capacity=16), [tk.BOS, tk.THINK])
+    ids, sess, _ = eng.generate_fused(s0, 64, [], SamplingParams(),
+                                      jax.random.PRNGKey(0))
+    assert len(ids) == 16 - 2
+    assert sess.pos == 16

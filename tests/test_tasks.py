@@ -4,7 +4,11 @@ property tests on the system's task-level invariants."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional in the CI image; skip the property tests
+# (not the whole run) when it is absent.
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data import tasks
 from repro.data.evaluate import extract_answer, is_correct
