@@ -49,3 +49,18 @@ MICRO = ModelConfig(
     vocab_size=tk.VOCAB_SIZE,
     max_position_embeddings=2048,
 ).validate()
+
+# The micro pair's drafter: pairs with MICRO for the serving-throughput
+# benchmark (benchmarks/bench_serving.py), where both models must be
+# dispatch-bound so the sequential/continuous req/s ratio isolates the
+# scheduler, not host matmul throughput.
+MICRO_SMALL = ModelConfig(
+    name="testbed-micro-small",
+    family="dense",
+    n_layers=1,
+    d_model=32,
+    n_heads=2, n_kv_heads=2, head_dim=16,
+    d_ff=64,
+    vocab_size=tk.VOCAB_SIZE,
+    max_position_embeddings=2048,
+).validate()

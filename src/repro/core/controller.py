@@ -11,7 +11,18 @@ Per reasoning step:
 Knobs (paper §4.1): acceptance policy/threshold, first-n base-model steps,
 thinking-token budget.  All state rollback is family-agnostic
 (snapshot/replay), so the controller runs unchanged on dense, MoE, SSM,
-hybrid, VLM and enc-dec backbones (DESIGN.md §Arch-applicability)."""
+hybrid, VLM and enc-dec backbones (DESIGN.md §Arch-applicability).
+
+Structure: one request is a resumable *state machine* over
+:class:`SpecReasonStepState` — phases ``speculate -> verify ->
+(fallback) -> ... -> close -> answer -> done``, advanced one phase at a
+time by :meth:`SpecReason.advance`.  ``run`` drives a single request
+start-to-finish (the paper's sequential regime); the continuous-batching
+scheduler (serving.scheduler) holds many states and, each tick, executes
+every request's current phase through batched engine calls, reusing the
+*decision* helpers here (``judge_draft`` / ``note_accept`` /
+``note_reject`` / ``note_base_step``) so both drivers are
+token-equivalent per request."""
 
 from __future__ import annotations
 
@@ -25,7 +36,8 @@ import numpy as np
 from ..sampling.sample import SamplingParams
 from ..serving.engine import Engine, Session
 from ..tokenizer import toy as tk
-from .policies import AcceptancePolicy, LogprobMargin, StaticThreshold
+from .policies import AcceptancePolicy, LogprobMargin, StaticThreshold, \
+    Verdict
 from .segmenter import SegmenterConfig, StepSegmenter
 from .spec_decode import SpecDecodeStats, spec_decode
 from .verifier import Verifier
@@ -107,6 +119,34 @@ class SpecReasonResult:
                     and s.accepted) / len(self.steps))
 
 
+@dataclasses.dataclass
+class SpecReasonStepState:
+    """One request's resumable control state.
+
+    Engine context lives in ``base_sess``/``small_sess`` when the request
+    is driven sequentially; the continuous-batching scheduler leaves them
+    None and keeps row handles instead — everything else (phase, budgets,
+    trace, PRNG key) is driver-agnostic."""
+    key: jax.Array
+    phase: str = "speculate"   # speculate|verify|fallback|close|answer|done
+    base_sess: Optional[Session] = None
+    small_sess: Optional[Session] = None
+    thinking: List[int] = dataclasses.field(default_factory=list)
+    steps: List[StepRecord] = dataclasses.field(default_factory=list)
+    spec_stats: SpecDecodeStats = dataclasses.field(
+        default_factory=SpecDecodeStats)
+    step_idx: int = 0
+    done_thinking: bool = False
+    answer_ids: List[int] = dataclasses.field(default_factory=list)
+    overlapped_s: float = 0.0
+    started_at: float = dataclasses.field(default_factory=time.perf_counter)
+    # transient, valid between speculate and verify:
+    draft_ids: Optional[List[int]] = None
+    pending: Optional[Tuple[List[int], Session]] = None
+    b_snap: Optional[Session] = None
+    s_snap: Optional[Session] = None
+
+
 class SpecReason:
     """Drives one request across a (base, small) engine pair."""
 
@@ -121,146 +161,224 @@ class SpecReason:
     # ------------------------------------------------------------------ run
     def run(self, prompt_ids: Sequence[int], key: jax.Array
             ) -> SpecReasonResult:
-        cfg = self.cfg
         self.base.meter.reset()
         self.small.meter.reset()
-        t0 = time.perf_counter()
+        st = self.begin(prompt_ids, key)
+        while st.phase != "done":
+            self.advance(st)
+        return self.result(st)
 
-        base_sess = self.base.extend(self.base.new_session(), list(prompt_ids))
-        small_sess = self.small.extend(self.small.new_session(),
-                                       list(prompt_ids))
+    # ---------------------------------------------------- state machine api
+    def begin(self, prompt_ids: Sequence[int], key: jax.Array
+              ) -> SpecReasonStepState:
+        st = SpecReasonStepState(key=key)
+        st.base_sess = self.base.extend(self.base.new_session(),
+                                        list(prompt_ids))
+        st.small_sess = self.small.extend(self.small.new_session(),
+                                          list(prompt_ids))
+        st.phase = self.think_phase(st)
+        return st
 
-        thinking: List[int] = []
-        steps: List[StepRecord] = []
-        spec_stats = SpecDecodeStats()
-        done = False
-        overlapped_s = 0.0
-        # overlapped mode: the small model's pre-drafted next step
-        pending: Optional[Tuple[List[int], "object"]] = None
+    def advance(self, st: SpecReasonStepState) -> SpecReasonStepState:
+        """Execute the request's current phase (one engine-visible unit of
+        work) and move it to the next phase."""
+        step = {"speculate": self.step_speculate,
+                "verify": self.step_verify,
+                "fallback": self.step_fallback,
+                "close": self.step_close,
+                "answer": self.step_answer}[st.phase]
+        step(st)
+        return st
 
-        for step_idx in range(cfg.max_steps):
-            if done or len(thinking) >= cfg.token_budget:
-                break
-            budget_left = cfg.token_budget - len(thinking)
-            max_step = min(self.segmenter.cfg.max_step_tokens, budget_left)
+    def result(self, st: SpecReasonStepState,
+               meters: Optional[Dict[str, Dict[str, float]]] = None
+               ) -> SpecReasonResult:
+        """Package a finished state.  ``meters`` overrides the sequential
+        engines' per-request meters (the continuous scheduler passes its
+        batch engines' aggregate meters)."""
+        assert st.phase == "done"
+        wall = time.perf_counter() - st.started_at
+        return SpecReasonResult(
+            thinking_ids=st.thinking, answer_ids=st.answer_ids,
+            steps=st.steps, wall_time=wall, spec_stats=st.spec_stats,
+            meters=meters if meters is not None else
+            {"base": self.base.meter.as_dict(),
+             "small": self.small.meter.as_dict()},
+            overlapped_s=st.overlapped_s)
 
-            use_small = step_idx >= cfg.first_n_base
-            if use_small:
-                key, k1 = jax.random.split(key)
-                s_snap = small_sess.snapshot()
-                b_snap = base_sess.snapshot()
-                if pending is not None:
-                    # pre-drafted during the previous step's verification
-                    ids, small_after = pending
-                    pending = None
-                    small_sess = small_after
-                else:
-                    # one fused device call drafts the whole step
-                    ids, small_sess, _ = self.small.generate(
-                        small_sess, max_step, self.segmenter.stop_ids,
-                        cfg.sampling, k1, fused=cfg.fused_decode)
-                end = self.segmenter.classify_end(ids)
-                body = self.segmenter.body(ids)
+    # ------------------------------------------- decision helpers (shared)
+    # Engine-free bookkeeping used by BOTH the sequential phase executors
+    # below and the continuous-batching scheduler — keeping the accept /
+    # reject / budget logic in one place is what makes the two drivers
+    # token-equivalent per request.
 
-                if cfg.overlapped and end == "step":
-                    # draft step k+1 now — on two-stream hardware this runs
-                    # concurrently with the base verification below
-                    key, k1b = jax.random.split(key)
-                    t_ov = time.perf_counter()
-                    nids, nsess, _ = self.small.generate(
-                        small_sess, self.segmenter.cfg.max_step_tokens,
-                        self.segmenter.stop_ids, cfg.sampling, k1b,
-                        fused=cfg.fused_decode)
-                    overlapped_s += time.perf_counter() - t_ov
-                    pending = (nids, nsess)
+    def think_phase(self, st: SpecReasonStepState) -> str:
+        """The reasoning loop-top condition: where does this request go
+        next after completing a step (or at the start)?"""
+        cfg = self.cfg
+        if st.done_thinking or st.step_idx >= cfg.max_steps \
+                or len(st.thinking) >= cfg.token_budget:
+            return "close"
+        return "speculate" if st.step_idx >= cfg.first_n_base else "fallback"
 
-                # A draft that hits max_step_tokens ("runaway") is a step
-                # the segmenter's cap forcibly closed — verify it like a
-                # clean <step> boundary (the cap exists so a rambling
-                # speculator cannot stall verification, segmenter.py).
-                if body and end in ("step", "final", "runaway"):
-                    delim = tk.THINK_END if end == "final" else tk.STEP
-                    vr = self.verifier.verify(base_sess, body, delim)
-                    utility = vr.utility
-                    if isinstance(cfg.policy, LogprobMargin):
-                        utility = cfg.policy.utility_from_logprob(
-                            vr.mean_logprob)
-                    verdict = cfg.policy.judge(utility)
-                    cfg.policy.observe(verdict)
-                    if verdict.accept:
-                        # close the accepted step with its delimiter (the
-                        # verifier's session stops after the body)
-                        base_sess = self.base.extend(vr.session_after_step,
-                                                     [delim])
-                        thinking += body + [delim]
-                        steps.append(StepRecord("small", utility, True,
-                                                body))
-                        if end == "final":
-                            done = True
-                        continue
-                    # rejected: restore both models to the step boundary
-                    # (a pre-drafted next step built on the rejected one is
-                    # dropped with it)
-                    small_sess = s_snap
-                    base_sess = b_snap
-                    pending = None
-                    steps.append(StepRecord("small", utility, False, body))
-                else:
-                    # malformed speculation (empty body / eos mid-thought):
-                    # treat as reject
-                    small_sess = s_snap
-                    base_sess = b_snap
-                    pending = None
-                    steps.append(StepRecord("small", 0.0, False, body))
+    def max_step_tokens(self, st: SpecReasonStepState) -> int:
+        return min(self.segmenter.cfg.max_step_tokens,
+                   self.cfg.token_budget - len(st.thinking))
 
-            # base model produces this step (fallback or first-n)
-            key, k2 = jax.random.split(key)
-            if cfg.use_spec_decode:
-                ids, base_sess, small_sess = spec_decode(
-                    self.base, self.small, base_sess, small_sess,
-                    max_step, self.segmenter.stop_ids, cfg.sampling, k2,
-                    gamma=cfg.spec_gamma, stats=spec_stats,
-                    fused=cfg.fused_decode)
-            else:
-                ids, base_sess, _ = self.base.generate(
-                    base_sess, max_step, self.segmenter.stop_ids,
-                    cfg.sampling, k2, fused=cfg.fused_decode)
-                # keep the small model's context in sync
-                small_sess = self.small.extend(small_sess, ids)
-            end = self.segmenter.classify_end(ids)
-            thinking += ids
-            pending = None   # base regeneration invalidates any pre-draft
-            steps.append(StepRecord("base", 9.0, True,
-                                    self.segmenter.body(ids)))
-            if end in ("final", "eos"):
-                done = True
+    def judge_draft(self, utility: float, mean_logprob: float
+                    ) -> Tuple[Verdict, float]:
+        """Policy judgment on a verified draft; returns (verdict, the
+        utility actually judged — remapped for logprob policies)."""
+        cfg = self.cfg
+        if isinstance(cfg.policy, LogprobMargin):
+            utility = cfg.policy.utility_from_logprob(mean_logprob)
+        verdict = cfg.policy.judge(utility)
+        cfg.policy.observe(verdict)
+        return verdict, utility
 
-        if not done:
+    def note_accept(self, st: SpecReasonStepState, body: List[int],
+                    end: str, utility: float) -> int:
+        """Record an accepted speculated step; returns the delimiter the
+        caller must append to the base context."""
+        delim = tk.THINK_END if end == "final" else tk.STEP
+        st.thinking += body + [delim]
+        st.steps.append(StepRecord("small", utility, True, body))
+        st.step_idx += 1
+        if end == "final":
+            st.done_thinking = True
+        st.draft_ids = st.b_snap = st.s_snap = None
+        st.phase = self.think_phase(st)
+        return delim
+
+    def note_reject(self, st: SpecReasonStepState, body: List[int],
+                    utility: float) -> None:
+        """Record a rejected (or malformed) speculated step; the caller
+        has already rolled both contexts back.  Falls through to base
+        regeneration within the same reasoning step."""
+        st.steps.append(StepRecord("small", utility, False, body))
+        st.draft_ids = st.b_snap = st.s_snap = None
+        st.pending = None
+        st.phase = "fallback"
+
+    def note_base_step(self, st: SpecReasonStepState, ids: List[int]
+                       ) -> None:
+        """Record a base-model-produced step (fallback or first-n)."""
+        end = self.segmenter.classify_end(ids)
+        st.thinking += ids
+        st.pending = None   # base regeneration invalidates any pre-draft
+        st.steps.append(StepRecord("base", 9.0, True,
+                                   self.segmenter.body(ids)))
+        st.step_idx += 1
+        if end in ("final", "eos"):
+            st.done_thinking = True
+        st.phase = self.think_phase(st)
+
+    # ------------------------------------------ sequential phase executors
+    def step_speculate(self, st: SpecReasonStepState) -> None:
+        cfg = self.cfg
+        st.key, k1 = jax.random.split(st.key)
+        st.s_snap = st.small_sess.snapshot()
+        st.b_snap = st.base_sess.snapshot()
+        if st.pending is not None:
+            # pre-drafted during the previous step's verification
+            ids, small_after = st.pending
+            st.pending = None
+            st.small_sess = small_after
+        else:
+            # one fused device call drafts the whole step
+            ids, st.small_sess, _ = self.small.generate(
+                st.small_sess, self.max_step_tokens(st),
+                self.segmenter.stop_ids, cfg.sampling, k1,
+                fused=cfg.fused_decode)
+        st.draft_ids = ids
+        end = self.segmenter.classify_end(ids)
+
+        if cfg.overlapped and end == "step":
+            # draft step k+1 now — on two-stream hardware this runs
+            # concurrently with the base model's verification
+            st.key, k1b = jax.random.split(st.key)
+            t_ov = time.perf_counter()
+            nids, nsess, _ = self.small.generate(
+                st.small_sess, self.segmenter.cfg.max_step_tokens,
+                self.segmenter.stop_ids, cfg.sampling, k1b,
+                fused=cfg.fused_decode)
+            st.overlapped_s += time.perf_counter() - t_ov
+            st.pending = (nids, nsess)
+        st.phase = "verify"
+
+    def step_verify(self, st: SpecReasonStepState) -> None:
+        ids = st.draft_ids
+        end = self.segmenter.classify_end(ids)
+        body = self.segmenter.body(ids)
+
+        # A draft that hits max_step_tokens ("runaway") is a step the
+        # segmenter's cap forcibly closed — verify it like a clean <step>
+        # boundary (the cap exists so a rambling speculator cannot stall
+        # verification, segmenter.py).
+        if body and end in ("step", "final", "runaway"):
+            delim = tk.THINK_END if end == "final" else tk.STEP
+            vr = self.verifier.verify(st.base_sess, body, delim)
+            verdict, utility = self.judge_draft(vr.utility, vr.mean_logprob)
+            if verdict.accept:
+                # close the accepted step with its delimiter (the
+                # verifier's session stops after the body)
+                st.base_sess = self.base.extend(vr.session_after_step,
+                                                [delim])
+                self.note_accept(st, body, end, utility)
+                return
+            # rejected: restore both models to the step boundary (a
+            # pre-drafted next step built on the rejected one drops too)
+            st.small_sess = st.s_snap
+            st.base_sess = st.b_snap
+            self.note_reject(st, body, utility)
+        else:
+            # malformed speculation (empty body / eos mid-thought):
+            # treat as reject
+            st.small_sess = st.s_snap
+            st.base_sess = st.b_snap
+            self.note_reject(st, body, 0.0)
+
+    def step_fallback(self, st: SpecReasonStepState) -> None:
+        cfg = self.cfg
+        st.key, k2 = jax.random.split(st.key)
+        max_step = self.max_step_tokens(st)
+        if cfg.use_spec_decode:
+            ids, st.base_sess, st.small_sess = spec_decode(
+                self.base, self.small, st.base_sess, st.small_sess,
+                max_step, self.segmenter.stop_ids, cfg.sampling, k2,
+                gamma=cfg.spec_gamma, stats=st.spec_stats,
+                fused=cfg.fused_decode)
+        else:
+            ids, st.base_sess, _ = self.base.generate(
+                st.base_sess, max_step, self.segmenter.stop_ids,
+                cfg.sampling, k2, fused=cfg.fused_decode)
+            # keep the small model's context in sync
+            st.small_sess = self.small.extend(st.small_sess, ids)
+        self.note_base_step(st, ids)
+
+    def step_close(self, st: SpecReasonStepState) -> None:
+        if not st.done_thinking:
             # budget exhausted: close the thinking phase like Dynasor-style
             # budget deadlines do, so the answer is still produced.
             close = [tk.THINK_END]
-            base_sess = self.base.extend(base_sess, close)
-            small_sess = self.small.extend(small_sess, close)
-            thinking += close
+            st.base_sess = self.base.extend(st.base_sess, close)
+            st.small_sess = self.small.extend(st.small_sess, close)
+            st.thinking += close
+        st.phase = "answer"
 
+    def step_answer(self, st: SpecReasonStepState) -> None:
         # final answer: always the base model (paper §3 — only post-think
         # tokens determine the final output)
-        key, k3 = jax.random.split(key)
+        cfg = self.cfg
+        st.key, k3 = jax.random.split(st.key)
         if cfg.use_spec_decode:
-            answer_ids, base_sess, small_sess = spec_decode(
-                self.base, self.small, base_sess, small_sess,
+            st.answer_ids, st.base_sess, st.small_sess = spec_decode(
+                self.base, self.small, st.base_sess, st.small_sess,
                 cfg.answer_max_tokens, [tk.EOS], cfg.sampling, k3,
-                gamma=cfg.spec_gamma, stats=spec_stats,
+                gamma=cfg.spec_gamma, stats=st.spec_stats,
                 fused=cfg.fused_decode)
         else:
-            answer_ids, base_sess, _ = self.base.generate(
-                base_sess, cfg.answer_max_tokens, [tk.EOS], cfg.sampling,
+            st.answer_ids, st.base_sess, _ = self.base.generate(
+                st.base_sess, cfg.answer_max_tokens, [tk.EOS], cfg.sampling,
                 k3, fused=cfg.fused_decode)
-
-        wall = time.perf_counter() - t0
-        return SpecReasonResult(
-            thinking_ids=thinking, answer_ids=answer_ids, steps=steps,
-            wall_time=wall, spec_stats=spec_stats,
-            meters={"base": self.base.meter.as_dict(),
-                    "small": self.small.meter.as_dict()},
-            overlapped_s=overlapped_s)
+        st.phase = "done"

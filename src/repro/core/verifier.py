@@ -30,6 +30,27 @@ from ..serving.engine import Engine, Session
 from ..tokenizer import toy as tk
 
 
+def mean_body_logprob(prev_logits, body_logits, body: List[int]) -> float:
+    """Mean base-model logprob of ``body`` given the prior context.
+
+    ``prev_logits``: the (V,) or (1, V) logits at the context's last token
+    (they predict the first body token); ``body_logits``: the (n, V)
+    logits at every body position.  Shared by the sequential verifier and
+    the continuous scheduler's batched verify so both compute the same
+    number."""
+    if not body:
+        return 0.0
+    prev = jnp.asarray(prev_logits)
+    if prev.ndim == 1:
+        prev = prev[None]
+    all_logits = jnp.concatenate([prev, jnp.asarray(body_logits)[:-1]],
+                                 axis=0)
+    logp = jax.nn.log_softmax(all_logits.astype(jnp.float32), axis=-1)
+    idx = jnp.asarray(body, jnp.int32)
+    lps = jnp.take_along_axis(logp, idx[:, None], axis=1)[:, 0]
+    return float(jnp.mean(lps))
+
+
 @dataclasses.dataclass
 class VerifyResult:
     utility: float              # digit-expectation utility score, 0-9
@@ -49,6 +70,17 @@ class Verifier:
         self.digit_ids = digit_ids or tk.DIGIT_IDS
         self.readout = readout
 
+    def utility_from_score_logits(self, score_logits) -> Tuple[float, int]:
+        """(V,) next-token logits after the score prompt -> (utility,
+        argmax digit).  Shared by sequential verify and the continuous
+        scheduler's batched verify."""
+        digit_logits = jnp.asarray(score_logits)[jnp.asarray(self.digit_ids)]
+        probs = np.asarray(jax.nn.softmax(digit_logits.astype(jnp.float32)))
+        argmax_score = int(np.argmax(probs))
+        expect = float(np.dot(probs, np.arange(10)))
+        utility = expect if self.readout == "expect" else float(argmax_score)
+        return utility, argmax_score
+
     def verify(self, base: Session, step_body: List[int],
                step_delim: Optional[int] = tk.STEP) -> VerifyResult:
         """Score ``step_body`` as the next reasoning step after ``base``.
@@ -65,25 +97,14 @@ class Verifier:
         # mean base-model logprob of the step body given the prior context
         # (logits at position i-1 predict token i; base.last_logits covers
         # the first body token)
-        lps = []
-        if base.last_logits is not None:
-            all_logits = jnp.concatenate(
-                [base.last_logits, logits_body[:-1]], axis=0)
-            logp = jax.nn.log_softmax(all_logits.astype(jnp.float32), axis=-1)
-            idx = jnp.asarray(body, jnp.int32)
-            lps = jnp.take_along_axis(logp, idx[:, None], axis=1)[:, 0]
-            mean_lp = float(jnp.mean(lps))
-        else:
-            mean_lp = 0.0
+        mean_lp = mean_body_logprob(base.last_logits, logits_body, body) \
+            if base.last_logits is not None else 0.0
 
         # score prompt: one prefill pass, then discard it from the cache
         score_logits, _ = self.engine.extend_logits(after_body,
                                                     [self.score_token])
-        digit_logits = score_logits[-1][jnp.asarray(self.digit_ids)]
-        probs = np.asarray(jax.nn.softmax(digit_logits.astype(jnp.float32)))
-        argmax_score = int(np.argmax(probs))
-        expect = float(np.dot(probs, np.arange(10)))
-        utility = expect if self.readout == "expect" else float(argmax_score)
+        utility, argmax_score = self.utility_from_score_logits(
+            score_logits[-1])
 
         # The returned session stops after the step BODY; the caller
         # appends the delimiter only on acceptance (one less engine call on

@@ -1,0 +1,136 @@
+"""Paged flash-decode — Pallas TPU kernel for single-token GQA attention
+over a *block-pool* KV cache (serving/paged_kv.py).
+
+Same math as ``decode_attention`` (online softmax over kv blocks, all G =
+H/K query heads of one kv head processed as a skinny (G, hd) MXU tile),
+but the KV cache is no longer one dense (B, K, S, hd) slab per batch: it
+is a global page pool ``(P, K, block_size, hd)`` addressed through
+per-sequence block tables.  That is what lets continuous batching admit by
+actual usage instead of worst-case capacity, and what makes SpecReason's
+rollback a block-table restore instead of a cache copy.
+
+  * grid = (batch, kv_heads, kv_blocks); kv_blocks innermost/sequential so
+    the online-softmax accumulator lives in VMEM scratch across a row's
+    pages.
+  * The page for grid step (ib, ih, ik) is chosen by the *scalar-prefetched*
+    block table: the BlockSpec index map reads ``tables[ib, ik]`` from SMEM
+    before the kernel body runs, so the pipeline DMAs exactly the pages the
+    row owns — gather happens in the prefetch engine, not in compute.
+  * Per-row lengths arrive via the same scalar prefetch; pages wholly past
+    a row's length are skipped (their table entries are 0 — a valid page id
+    whose DMA lands but whose compute is predicated off), and the partial
+    tail page is masked per-slot.
+  * Rows may SHARE pages (prefix caching, copy-on-write snapshots): the
+    kernel only reads, so aliased tables need no special handling.
+
+Validated against ``ref.paged_decode_reference`` — and, through
+``PagedKVStore.gather``, against the dense ``decode_attention`` kernel —
+in interpret mode (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref,
+                         o_ref, acc_ref, m_ref, l_ref, *, block_size: int,
+                         scale: float):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[ib]
+    k_start = ik * block_size
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k_pages/v_pages: (P, K, block_size, hd) — the global
+    page pool; block_tables: (B, nb) int32 page ids per row (pad with 0);
+    lengths: (B,) int32 valid tokens per row.  Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    p_, kh, block_size, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    assert h % kh == 0
+    group = h // kh
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, kh, group, hd)
+    grid = (b, kh, nb)
+    kernel = functools.partial(_paged_decode_kernel, block_size=block_size,
+                               scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+                # the page gather: block index = the prefetched table entry
+                pl.BlockSpec((1, 1, block_size, hd),
+                             lambda ib, ih, ik, lens, tbl: (tbl[ib, ik],
+                                                            ih, 0, 0)),
+                pl.BlockSpec((1, 1, block_size, hd),
+                             lambda ib, ih, ik, lens, tbl: (tbl[ib, ik],
+                                                            ih, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, hd), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, h, hd)

@@ -54,6 +54,26 @@ def decode_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_reference(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """Paged flash-decode oracle: gather each row's pages into a dense
+    cache, then run ``decode_reference``.
+
+    q: (B,H,hd); k_pages/v_pages: (P, K, bs, hd) — the global page pool;
+    block_tables: (B, nb) int32 page ids (padding entries point at any
+    valid page — they are masked by ``lengths``); lengths: (B,)."""
+    b = q.shape[0]
+    _, kh, bs, hd = k_pages.shape
+    nb = block_tables.shape[1]
+    # (B, nb, K, bs, hd) -> (B, K, nb*bs, hd)
+    k = k_pages[block_tables].transpose(0, 2, 1, 3, 4).reshape(
+        b, kh, nb * bs, hd)
+    v = v_pages[block_tables].transpose(0, 2, 1, 3, 4).reshape(
+        b, kh, nb * bs, hd)
+    return decode_reference(q, k, v, lengths)
+
+
 def ssd_reference(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                   c: jax.Array, init_state: jax.Array):
     """Sequential (non-chunked) SSD recurrence — the definitional form.

@@ -7,9 +7,18 @@ All schemes decode through the engines' fused on-device loop by default
 ``--decode-loop eager`` to fall back to the per-token reference loop and
 see how much of the "latency" is pure host dispatch.
 
+``--scheduler continuous`` serves the requests through the
+continuous-batching scheduler instead of one-at-a-time: every tick batches
+all drafting requests into one small-model call and all verifying /
+regenerating requests into one base-model call (``--batch`` concurrent
+rows, paged-KV admission control).  ``--arrival-rate`` simulates Poisson
+arrivals (req/s; 0 = all at t=0).
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
+  PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \\
+      --batch 8 -n 16 --arrival-rate 2
 """
 
 from __future__ import annotations
@@ -26,7 +35,10 @@ from ..core.policies import StaticThreshold
 from ..data import tasks
 from ..data.evaluate import is_correct
 from ..sampling.sample import SamplingParams
+from ..serving.kv_manager import KVBudget, KVManager
 from ..serving.loader import load_testbed_engines
+from ..serving.scheduler import ContinuousScheduler
+from ..serving.workload import poisson_arrivals, run_workload, summarize
 from ..tokenizer import toy as tk
 
 SCHEMES = ("base", "small", "specdecode", "specreason", "specreason+decode")
@@ -58,6 +70,45 @@ def _meter_line(name: str, m: dict) -> str:
             f"/ {m.get('prefill_calls', 0)} calls")
 
 
+def serve_continuous(args, base, small, reqs, fused: bool) -> None:
+    """Continuous-batching serving path: paged-KV admission + per-tick
+    speculate/verify batching (serving.scheduler.ContinuousScheduler)."""
+    import time
+    cfg = SpecReasonConfig(policy=StaticThreshold(args.threshold),
+                           token_budget=args.budget,
+                           sampling=SamplingParams(
+                               temperature=args.temperature),
+                           fused_decode=fused)
+    ctrl = SpecReason(base, small, cfg)
+    kv = KVManager(base.model.cfg, small.model.cfg,
+                   KVBudget(total_bytes=args.kv_budget_mb << 20))
+    sched = ContinuousScheduler(ctrl, kv, max_batch=args.batch,
+                                context_capacity=min(base.max_len,
+                                                     args.budget + 64))
+    rng = random.Random(args.seed)
+    pairs = [(t, jax.random.PRNGKey(1000 * args.seed + i))
+             for i, t in enumerate(reqs)]
+    arrivals = poisson_arrivals(len(pairs), args.arrival_rate, rng)
+    t0 = time.perf_counter()
+    handles = run_workload(sched, pairs, arrivals)
+    wall = time.perf_counter() - t0
+    for i, h in enumerate(handles):
+        res = h.result
+        ok = is_correct(h.task, res.answer_ids)
+        print(f"[continuous] req{i}: {'OK ' if ok else 'BAD'} "
+              f"lat={h.e2e_latency:.2f}s think={res.n_thinking_tokens} "
+              f"answer={tk.detok(res.answer_ids)}")
+    stats = summarize(handles, wall)
+    stats.update({
+        "scheduler": "continuous", "batch": args.batch,
+        "arrival_rate": args.arrival_rate, "ticks": sched.ticks,
+        "preemptions": sched.preemptions,
+        "accuracy": sum(is_correct(h.task, h.result.answer_ids)
+                        for h in handles) / max(len(handles), 1),
+    })
+    print(json.dumps(stats))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheme", choices=SCHEMES + ("all",),
@@ -74,12 +125,33 @@ def main(argv=None):
                          "(default); eager = per-token reference loop")
     ap.add_argument("--meters", action="store_true",
                     help="print the per-engine meter breakdown per request")
+    ap.add_argument("--scheduler", choices=("sequential", "continuous"),
+                    default="sequential",
+                    help="sequential = one request start-to-finish per turn "
+                         "(the paper's regime); continuous = step-"
+                         "interleaved continuous batching with paged-KV "
+                         "admission")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="continuous scheduler: max concurrent rows")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = burst at t=0)")
+    ap.add_argument("--kv-budget-mb", type=int, default=64,
+                    help="continuous scheduler: HBM budget for the static "
+                         "base/small KV partition")
     args = ap.parse_args(argv)
+    if args.scheduler == "continuous" and args.scheme != "specreason":
+        ap.error("--scheduler continuous serves the specreason scheme "
+                 "only; drop --scheme or use the sequential scheduler")
 
     fused = args.decode_loop == "fused"
     base, small = load_testbed_engines(args.ckpt_dir)
     rng = random.Random(args.seed)
     reqs = [tasks.sample_task(rng) for _ in range(args.num_requests)]
+
+    if args.scheduler == "continuous":
+        serve_continuous(args, base, small, reqs, fused)
+        return
+
     schemes = SCHEMES if args.scheme == "all" else (args.scheme,)
 
     for scheme in schemes:

@@ -137,8 +137,13 @@ class Model:
         x = jnp.take(params["tok_embed"], tokens, axis=0)
         if not cfg.use_rope:
             s = tokens.shape[1]
-            pos = start_pos + jnp.arange(s)
-            x = x + sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+            if jnp.ndim(start_pos) == 1:          # per-row ragged positions
+                pos = start_pos[:, None] + jnp.arange(s)[None, :]
+                x = x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+            else:
+                pos = start_pos + jnp.arange(s)
+                x = x + sinusoidal_positions(
+                    pos, cfg.d_model)[None].astype(x.dtype)
         return constrain(x, ("act_batch", "act_seq", "act_embed"))
 
     def _unembed(self, params, x) -> jax.Array:
@@ -283,12 +288,17 @@ class Model:
         """Process S tokens starting at state.pos (chunked prefill / extend).
         Returns (logits (B,S,V), new state).  Used for prompts, for
         SpecReason verification passes, and for accepting speculated steps
-        into the base model's cache."""
+        into the base model's cache.  ``state.pos`` may be a scalar or a
+        (B,) vector (ragged rows — continuous batching); the attention
+        layer handles per-row scatter/masking."""
         cfg = self.cfg
         b, s = tokens.shape
         start = state.pos
         x = self._embed(params, tokens, start)
-        positions = jnp.broadcast_to(start + jnp.arange(s)[None], (b, s))
+        if jnp.ndim(start) == 1:
+            positions = start[:, None] + jnp.arange(s)[None, :]
+        else:
+            positions = jnp.broadcast_to(start + jnp.arange(s)[None], (b, s))
         window = cfg.sliding_window
 
         if cfg.family == "ssm":

@@ -4,8 +4,17 @@ statically partitioned between the two models"), expressed for a TPU HBM
 budget.
 
 Given the per-device HBM budget and both model configs, the manager solves
-for the maximum context capacity each engine can be provisioned with under
-a fixed split fraction, and accounts for every live session's cache."""
+for the capacity each engine can be provisioned with under a fixed split
+fraction, and accounts for every live session's cache.
+
+Accounting unit: **KV blocks**, not raw bytes.  The continuous-batching
+subsystem allocates attention KV in fixed-size token blocks
+(serving/paged_kv.py), so each partition's capacity is expressed as a
+block count and every attention allocation is quantized to whole blocks —
+``capacity_blocks``/``used_blocks``/``free_blocks`` are what the paged
+pools and the admission controller consume.  Constant-size recurrent (SSM)
+state is not paged (it never grows); it is charged exactly, in
+block-equivalents."""
 
 from __future__ import annotations
 
@@ -13,6 +22,8 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from ..models.config import ModelConfig
+
+DEFAULT_BLOCK_SIZE = 16       # tokens per KV block (paged_kv pool unit)
 
 
 def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
@@ -45,42 +56,78 @@ class KVBudget:
 
 
 class KVManager:
-    """Tracks live sessions' cache usage against the static partition."""
+    """Tracks live sessions' cache usage against the static partition, in
+    whole KV blocks."""
 
     def __init__(self, base_cfg: ModelConfig, small_cfg: ModelConfig,
-                 budget: KVBudget):
+                 budget: KVBudget, block_size: int = DEFAULT_BLOCK_SIZE):
         self.cfgs = {"base": base_cfg, "small": small_cfg}
         self.budget = budget
+        self.block_size = block_size
         b, s = budget.split()
         self.capacity_bytes = {"base": b, "small": s}
-        self.used_bytes = {"base": 0, "small": 0}
+        self.used_blocks = {"base": 0, "small": 0}
         self.sessions: Dict[str, Tuple[str, int]] = {}
 
+    # ------------------------------------------------------------- blocks
+    def block_bytes(self, which: str) -> int:
+        """Bytes of one KV block of ``which``'s attention cache (0 for
+        attention-less models — their state is charged in equivalents of
+        the OTHER accounting below)."""
+        return kv_bytes_per_token(self.cfgs[which]) * self.block_size
+
+    def capacity_blocks(self, which: str) -> int:
+        bb = self.block_bytes(which)
+        if bb == 0:
+            # no attention cache: express the byte budget in units of one
+            # session's constant-size state so admission still counts
+            per = max(ssm_state_bytes(self.cfgs[which]), 1)
+            return self.capacity_bytes[which] // per
+        return self.capacity_bytes[which] // bb
+
+    def free_blocks(self, which: str) -> int:
+        return self.capacity_blocks(which) - self.used_blocks[which]
+
+    def _blocks_needed(self, which: str, capacity: int, batch: int) -> int:
+        cfg = self.cfgs[which]
+        bb = self.block_bytes(which)
+        if bb == 0:
+            return batch  # one constant-size state unit per sequence
+        attn = -(-capacity // self.block_size) * batch
+        fixed = -(-ssm_state_bytes(cfg) * batch // bb)  # hybrid: exact, in
+        return attn + fixed                             # block-equivalents
+
+    # ---------------------------------------------------------- sessions
     def max_context(self, which: str, batch: int = 1) -> int:
         """Longest context capacity a new batch could be provisioned with."""
         cfg = self.cfgs[which]
-        per_tok = kv_bytes_per_token(cfg)
-        fixed = ssm_state_bytes(cfg) * batch
-        free = self.capacity_bytes[which] - self.used_bytes[which] - fixed
-        if per_tok == 0:
-            return 1 << 30 if free >= 0 else 0
-        return max(free // (per_tok * batch), 0)
+        bb = self.block_bytes(which)
+        if bb == 0:
+            return (1 << 30) if self.free_blocks(which) >= batch else 0
+        free = self.free_blocks(which)
+        fixed = -(-ssm_state_bytes(cfg) * batch // bb)
+        return max(((free - fixed) // batch) * self.block_size, 0)
 
     def allocate(self, session_id: str, which: str, capacity: int,
                  batch: int = 1) -> bool:
-        cfg = self.cfgs[which]
-        need = kv_bytes_per_token(cfg) * capacity * batch \
-            + ssm_state_bytes(cfg) * batch
-        if self.used_bytes[which] + need > self.capacity_bytes[which]:
+        need = self._blocks_needed(which, capacity, batch)
+        if self.used_blocks[which] + need > self.capacity_blocks(which):
             return False
-        self.used_bytes[which] += need
+        self.used_blocks[which] += need
         self.sessions[session_id] = (which, need)
         return True
 
     def release(self, session_id: str) -> None:
-        which, need = self.sessions.pop(session_id)
-        self.used_bytes[which] -= need
+        """Idempotent: releasing an unknown or already-released session is
+        a no-op (the scheduler's error paths may release twice)."""
+        entry = self.sessions.pop(session_id, None)
+        if entry is None:
+            return
+        which, need = entry
+        self.used_blocks[which] -= need
+        assert self.used_blocks[which] >= 0, \
+            f"negative KV usage for {which!r} after releasing {session_id!r}"
 
     def utilization(self) -> Dict[str, float]:
-        return {k: self.used_bytes[k] / max(self.capacity_bytes[k], 1)
-                for k in self.used_bytes}
+        return {k: self.used_blocks[k] / max(self.capacity_blocks(k), 1)
+                for k in self.used_blocks}

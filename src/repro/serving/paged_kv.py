@@ -1,0 +1,257 @@
+"""Paged KV allocation: a block-pool allocator with per-sequence block
+tables, a free-list, refcounted copy-on-write snapshots, and a physical
+page store.
+
+Why paged, and why here: the sequential serving stack provisions one dense
+``capacity``-token cache slab per session, so admission control must
+reserve the worst case and utilization collapses under concurrency.  A
+block pool allocates KV in fixed-size token blocks (vLLM-style paging,
+rtp-llm's cache manager) so admission is by *actual* usage and SpecReason's
+step-granular rollback becomes block-table surgery:
+
+  * **snapshot** = copy the block table and bump every block's refcount
+    (copy-on-write: a later append into a shared partial block first copies
+    it to a fresh block);
+  * **rollback** = restore the snapshot's table and free the orphaned
+    blocks the rejected speculation had grown into.
+
+Only *attention* KV is paged.  SSM/conv recurrent states are constant-size
+per sequence (no growth, nothing to page) and roll back by snapshot of the
+state itself — see DESIGN.md §Paged KV.
+
+Layers:
+  PagedKVPool   block ids + free-list + refcounts (pure accounting)
+  PagedSeq      one sequence's block table over a pool (CoW append/rollback)
+  PagedKVStore  physical (pages, kv_heads, block_size, head_dim) arrays per
+                layer; applies the copy list PagedSeq emits; gathers dense
+                caches for validation against the dense path
+The Pallas kernel in ``kernels.paged_decode_attention`` consumes the
+store's page layout directly through scalar-prefetched block tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PoolExhausted(Exception):
+    """The block pool has no free block; caller should preempt or queue."""
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagedKVPool:
+    """Fixed-size-block allocator: free-list + per-block refcounts.
+
+    Blocks are plain integer ids; the pool never touches tensor data (that
+    is ``PagedKVStore``).  Refcounts > 1 mean the block is shared between a
+    live sequence and one or more snapshots (or a shared prefix)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free-list: reuse hot blocks first
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref = np.zeros(num_blocks, np.int32)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, block: int) -> int:
+        return int(self._ref[block])
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return cdiv(n_tokens, self.block_size)
+
+    # ---------------------------------------------------------- lifecycle
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"pool exhausted: {self.num_blocks} blocks all live")
+        b = self._free.pop()
+        assert self._ref[b] == 0
+        self._ref[b] = 1
+        return b
+
+    def retain(self, block: int) -> None:
+        assert self._ref[block] > 0, f"retain of free block {block}"
+        self._ref[block] += 1
+
+    def release(self, block: int) -> None:
+        assert self._ref[block] > 0, f"double free of block {block}"
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            self._free.append(block)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTableSnapshot:
+    """A refcounted view of a sequence at a past length.  Holds one
+    reference on every listed block until consumed by ``PagedSeq.restore``
+    or dropped via ``PagedSeq.discard_snapshot``."""
+    blocks: Tuple[int, ...]
+    length: int
+
+
+class PagedSeq:
+    """One sequence's block table over a shared pool.
+
+    ``append(n)`` grows the logical length by n tokens, allocating blocks
+    as needed.  It returns ``(new_blocks, copies)`` where ``copies`` is a
+    list of ``(src, dst)`` block pairs that a physical store must copy —
+    emitted when the tail block was shared with a snapshot (copy-on-write).
+    """
+
+    def __init__(self, pool: PagedKVPool):
+        self.pool = pool
+        self.blocks: List[int] = []
+        self.length = 0
+
+    @property
+    def block_table(self) -> List[int]:
+        return list(self.blocks)
+
+    def append(self, n_tokens: int) -> Tuple[List[int], List[Tuple[int, int]]]:
+        if n_tokens < 0:
+            raise ValueError("append of negative token count")
+        if n_tokens == 0:
+            return [], []
+        bs = self.pool.block_size
+        copies: List[Tuple[int, int]] = []
+        new_blocks: List[int] = []
+        # copy-on-write: writing into a partially-filled tail block that a
+        # snapshot still references must not mutate the snapshot's view
+        if self.length % bs != 0 and self.blocks:
+            tail = self.blocks[-1]
+            if self.pool.refcount(tail) > 1:
+                fresh = self.pool.alloc()
+                copies.append((tail, fresh))
+                self.blocks[-1] = fresh
+                self.pool.release(tail)
+        need = self.pool.blocks_for_tokens(self.length + n_tokens) \
+            - len(self.blocks)
+        try:
+            for _ in range(need):
+                b = self.pool.alloc()
+                new_blocks.append(b)
+                self.blocks.append(b)
+        except PoolExhausted:
+            # roll the partial grow back so the caller can preempt + retry
+            for b in reversed(new_blocks):
+                self.blocks.pop()
+                self.pool.release(b)
+            for src, dst in reversed(copies):
+                self.blocks[-1] = src
+                self.pool.retain(src)
+                self.pool.release(dst)
+            raise
+        self.length += n_tokens
+        return new_blocks, copies
+
+    def snapshot(self) -> BlockTableSnapshot:
+        for b in self.blocks:
+            self.pool.retain(b)
+        return BlockTableSnapshot(tuple(self.blocks), self.length)
+
+    def restore(self, snap: BlockTableSnapshot) -> List[int]:
+        """Roll back to ``snap`` (consuming it).  Blocks the sequence grew
+        beyond the snapshot are released; returns the orphaned block ids
+        that became fully free (for observability/tests)."""
+        freed = []
+        for b in self.blocks:
+            self.pool.release(b)
+            if self.pool.refcount(b) == 0:
+                freed.append(b)
+        # adopt the snapshot's references (no retain: ownership transfers)
+        self.blocks = list(snap.blocks)
+        self.length = snap.length
+        return freed
+
+    def discard_snapshot(self, snap: BlockTableSnapshot) -> None:
+        for b in snap.blocks:
+            self.pool.release(b)
+
+    def free(self) -> None:
+        for b in self.blocks:
+            self.pool.release(b)
+        self.blocks = []
+        self.length = 0
+
+
+class PagedKVStore:
+    """Physical paged KV for one attention model: per layer a
+    ``(num_blocks, kv_heads, block_size, head_dim)`` page array pair.
+
+    This is the layout ``kernels.paged_decode_attention`` reads through
+    scalar-prefetched block tables.  ``scatter``/``gather`` convert between
+    dense per-sequence caches and pages so the paged path can be validated
+    against the dense engine bit-for-bit (tests/test_paged_kv.py)."""
+
+    def __init__(self, pool: PagedKVPool, n_layers: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.float32):
+        self.pool = pool
+        shape = (n_layers, pool.num_blocks, kv_heads, pool.block_size,
+                 head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+
+    def apply_copies(self, copies: Sequence[Tuple[int, int]]) -> None:
+        """Execute the (src, dst) page copies a CoW append emitted."""
+        for src, dst in copies:
+            self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
+            self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+
+    def scatter(self, seq: PagedSeq, k_new: jax.Array, v_new: jax.Array,
+                start: int) -> None:
+        """Write ``k_new``/``v_new`` of shape (L, n, kv, hd) into the
+        sequence's pages at token offsets start..start+n-1."""
+        bs = self.pool.block_size
+        n = k_new.shape[1]
+        for i in range(n):
+            tok = start + i
+            page = seq.blocks[tok // bs]
+            slot = tok % bs
+            self.k_pages = self.k_pages.at[:, page, :, slot].set(
+                k_new[:, i].astype(self.k_pages.dtype))
+            self.v_pages = self.v_pages.at[:, page, :, slot].set(
+                v_new[:, i].astype(self.v_pages.dtype))
+
+    def gather(self, seq: PagedSeq, layer: int) -> Tuple[jax.Array, jax.Array]:
+        """Dense (length, kv, hd) caches for one layer of one sequence."""
+        idx = jnp.asarray(seq.blocks, jnp.int32)
+        k = self.k_pages[layer, idx]          # (nb, kv, bs, hd)
+        v = self.v_pages[layer, idx]
+        nb, kv, bs, hd = k.shape
+        k = k.transpose(0, 2, 1, 3).reshape(nb * bs, kv, hd)
+        v = v.transpose(0, 2, 1, 3).reshape(nb * bs, kv, hd)
+        return k[:seq.length], v[:seq.length]
+
+
+def pad_block_tables(seqs: Sequence[PagedSeq],
+                     max_blocks: Optional[int] = None) -> np.ndarray:
+    """(B, max_blocks) int32 block tables for a batched kernel call.
+    Padding entries are 0 — a valid page id whose blocks the kernel skips
+    via the per-row length (garbage DMA, no compute)."""
+    nb = max((len(s.blocks) for s in seqs), default=1)
+    nb = max(nb, 1)
+    if max_blocks is not None:
+        nb = max(nb, max_blocks)
+    out = np.zeros((len(seqs), nb), np.int32)
+    for i, s in enumerate(seqs):
+        out[i, :len(s.blocks)] = s.blocks
+    return out

@@ -1,12 +1,39 @@
-"""Request scheduler: FIFO admission against the KV budget + round-robin
-service of active SpecReason requests.
+"""Request scheduling over a SpecReason engine pair.
 
-The paper serves requests one at a time per GPU pair (sequential small/base
-turns); this scheduler generalizes that to a queue with admission control so
-the serving driver can sustain a workload without oversubscribing the KV
-partition.  Interleaving is cooperative: each turn advances one request by
-one reasoning step (speculate -> verify -> fallback), which keeps
-per-request latency fair and matches the paper's step-granular structure."""
+Two regimes:
+
+``Scheduler`` — the paper's sequential regime: admission-controlled FIFO,
+one request served start-to-finish per turn.  Kept as the semantic
+reference; the continuous scheduler is tested token-equivalent to it.
+
+``ContinuousScheduler`` — continuous batching at *reasoning-step*
+granularity.  Every request is a resumable ``SpecReasonStepState`` (the
+controller's state machine); each ``tick`` groups all active requests by
+phase and executes each group as ONE batched engine call:
+
+    speculate-batch : every drafting request  -> one small-model fused
+                      multi-sequence decode call
+    verify-batch    : every verifying request -> one base-model scoring
+                      prefill ([body..., <score>] per row, then the score
+                      token is dropped from every context)
+    delim/close     : owed step delimiters + </think> closers -> one
+                      merged base extend
+    fallback/answer : rejected-step regenerations and final answers ->
+                      one base-model fused decode with per-row stop sets
+                      (+ one small-model sync extend)
+
+so the tick costs a handful of device dispatches regardless of how many
+requests are in flight — the step-granular structure of SpecReason (§4.1)
+is exactly the right batching unit.  Admission is by *block count*
+(serving/paged_kv.py pools sized from the KVManager's static partition):
+a request is admitted when its prompt plus one step of headroom fits, and
+if the pool later runs dry the youngest request is preempted (blocks
+freed, request requeued for recompute).  Per-request rollback on rejected
+speculation is an O(1) row truncate plus a block-table restore that frees
+the orphaned blocks.
+
+Per-request greedy-token equivalence with the sequential regime is tested
+in tests/test_serving.py (same tokens, same steps, same answers)."""
 
 from __future__ import annotations
 
@@ -14,13 +41,21 @@ import dataclasses
 import time
 import uuid
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from ..core.controller import SpecReason, SpecReasonConfig, SpecReasonResult
+from ..core.controller import (SpecReason, SpecReasonResult,
+                               SpecReasonStepState)
+from ..core.verifier import mean_body_logprob
 from ..data.tasks import Task, question_tokens
-from .kv_manager import KVBudget, KVManager
+from ..tokenizer import toy as tk
+from .batch_engine import BatchEngine, RowSnapshot
+from .kv_manager import KVManager
+from .paged_kv import (BlockTableSnapshot, PagedKVPool, PagedSeq,
+                       PoolExhausted)
 
 
 @dataclasses.dataclass
@@ -29,8 +64,13 @@ class Request:
     request_id: str = dataclasses.field(
         default_factory=lambda: uuid.uuid4().hex[:8])
     submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    key: Optional[jax.Array] = None
     result: Optional[SpecReasonResult] = None
     finished_at: Optional[float] = None
+    # why the scheduler could not (yet) run this request: admission block
+    # ("blocked: need N..., have M...") or preemption — surfaced instead of
+    # an opaque None
+    blocked_reason: Optional[str] = None
 
     @property
     def e2e_latency(self) -> Optional[float]:
@@ -40,7 +80,8 @@ class Request:
 
 
 class Scheduler:
-    """Admission-controlled FIFO over a SpecReason engine pair."""
+    """Admission-controlled FIFO over a SpecReason engine pair (the
+    paper's sequential regime)."""
 
     def __init__(self, controller: SpecReason, kv: KVManager,
                  context_capacity: int = 1024):
@@ -50,15 +91,26 @@ class Scheduler:
         self.queue: Deque[Request] = deque()
         self.done: List[Request] = []
 
-    def submit(self, task: Task) -> Request:
-        req = Request(task)
+    def submit(self, task: Task, key: Optional[jax.Array] = None) -> Request:
+        req = Request(task, key=key)
         self.queue.append(req)
         return req
 
+    def _admission_block_reason(self) -> str:
+        cap = self.context_capacity
+        parts = []
+        for which in ("base", "small"):
+            have = self.kv.max_context(which)
+            if have < cap:
+                parts.append(f"{which} needs {cap} tokens, has {have}")
+        return "blocked: " + ("; ".join(parts) or
+                              f"need {cap} tokens per engine")
+
     def step(self, key: jax.Array) -> Optional[Request]:
         """Admit + fully serve the next request (the paper's sequential
-        regime).  Returns the finished request or None if queue empty /
-        admission blocked."""
+        regime).  Returns the finished request, or None if the queue is
+        empty / admission is blocked — in which case the queued request
+        carries ``blocked_reason`` ("blocked: need N tokens, have M")."""
         if not self.queue:
             return None
         req = self.queue[0]
@@ -67,14 +119,18 @@ class Scheduler:
         ok_s = self.kv.allocate(req.request_id + ":s", "small",
                                 self.context_capacity)
         if not (ok_b and ok_s):
-            if ok_b:
-                self.kv.release(req.request_id + ":b")
-            if ok_s:
-                self.kv.release(req.request_id + ":s")
+            # release the half that DID fit before computing the reason,
+            # so "have M" reflects the actually-free capacity
+            self.kv.release(req.request_id + ":b")    # idempotent
+            self.kv.release(req.request_id + ":s")
+            req.blocked_reason = self._admission_block_reason()
             return None
+        req.blocked_reason = None
         self.queue.popleft()
         try:
-            req.result = self.controller.run(question_tokens(req.task), key)
+            req.result = self.controller.run(question_tokens(req.task),
+                                             req.key if req.key is not None
+                                             else key)
             req.finished_at = time.perf_counter()
         finally:
             self.kv.release(req.request_id + ":b")
@@ -88,6 +144,426 @@ class Scheduler:
             key, sub = jax.random.split(key)
             r = self.step(sub)
             if r is None:
+                # admission blocked: the head request's blocked_reason
+                # says why (need/have) — not an opaque stop
                 break
             out.append(r)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Active:
+    """One admitted request's serving-side handles."""
+    req: Request
+    state: SpecReasonStepState
+    base_row: int
+    small_row: int
+    base_seq: PagedSeq
+    small_seq: PagedSeq
+    alive: bool = True
+    # step-boundary rollback points (speculate -> verify window)
+    b_snap: Optional[RowSnapshot] = None
+    s_snap: Optional[RowSnapshot] = None
+    b_seq_snap: Optional[BlockTableSnapshot] = None
+    s_seq_snap: Optional[BlockTableSnapshot] = None
+    # transient verify-phase scratch
+    end: str = ""
+    body: List[int] = dataclasses.field(default_factory=list)
+    mean_lp: float = 0.0
+    # base-context tokens owed before this row's next base op (accepted
+    # step delimiters, </think> closers) — flushed once per tick in one
+    # merged extend
+    pending_base: List[int] = dataclasses.field(default_factory=list)
+
+
+class ContinuousScheduler:
+    """Step-interleaved continuous batching over a SpecReason pair."""
+
+    def __init__(self, controller: SpecReason, kv: KVManager,
+                 max_batch: int = 8, context_capacity: int = 256,
+                 engine_capacity: Optional[int] = None):
+        cfg = controller.cfg
+        if cfg.use_spec_decode or cfg.overlapped:
+            raise NotImplementedError(
+                "continuous batching currently covers the plain "
+                "speculate/verify/fallback pipeline; use the sequential "
+                "Scheduler for spec_decode/overlapped modes")
+        self.controller = controller
+        self.kv = kv
+        # engine capacity defaults to the sequential engines' max_len so a
+        # batched row has the same reduction shapes as a sequential
+        # session — the bit-exactness contract (batch_engine docstring)
+        engine_capacity = engine_capacity or controller.base.max_len
+        if context_capacity > engine_capacity:
+            raise ValueError("context_capacity exceeds engine capacity")
+        self.context_capacity = context_capacity
+        self.base_be = BatchEngine(controller.base.model,
+                                   controller.base.params, max_batch,
+                                   engine_capacity,
+                                   name=f"cb-{controller.base.name}")
+        self.small_be = BatchEngine(controller.small.model,
+                                    controller.small.params, max_batch,
+                                    engine_capacity,
+                                    name=f"cb-{controller.small.name}")
+        self.pools = {
+            "base": PagedKVPool(max(kv.capacity_blocks("base"), 1),
+                                kv.block_size),
+            "small": PagedKVPool(max(kv.capacity_blocks("small"), 1),
+                                 kv.block_size),
+        }
+        self.queue: Deque[Request] = deque()
+        self.active: List[_Active] = []
+        self.done: List[Request] = []
+        self.preemptions = 0
+        self.ticks = 0
+        # one compiled batched key split per tick phase (an un-jitted vmap
+        # would retrace per call; a per-request host split would dispatch
+        # per request)
+        self._split_jit = jax.jit(jax.vmap(jax.random.split))
+
+    # ------------------------------------------------------------- intake
+    def submit(self, task: Task, key: Optional[jax.Array] = None) -> Request:
+        req = Request(task, key=key)
+        self.queue.append(req)
+        return req
+
+    def _headroom_blocks(self) -> int:
+        seg = self.controller.segmenter.cfg
+        return self.pools["base"].blocks_for_tokens(seg.max_step_tokens + 1)
+
+    def _worst_case_tokens(self, prompt_len: int) -> int:
+        """Upper bound on one request's context length: prompt + thinking
+        (the budget may be overshot by one capped step) + the </think>
+        closer + the answer, plus one extend bucket of padding slack."""
+        cfg = self.controller.cfg
+        seg = self.controller.segmenter.cfg
+        return (prompt_len + cfg.token_budget + 2 * seg.max_step_tokens
+                + cfg.answer_max_tokens + 2 + 32)
+
+    def _admit(self, key: jax.Array) -> None:
+        admitted: List[_Active] = []
+        prompts: List[List[int]] = []
+        while self.queue:
+            if not (self.base_be.free_rows and self.small_be.free_rows):
+                break
+            req = self.queue[0]
+            prompt = question_tokens(req.task)
+            # a request whose worst-case context cannot fit an engine row
+            # is refused HERE with a clear error, not with a mid-serve
+            # row-overflow crash
+            worst = self._worst_case_tokens(len(prompt))
+            if worst > self.base_be.capacity:
+                raise RuntimeError(
+                    f"request {req.request_id} can never be served: "
+                    f"worst-case context {worst} tokens exceeds the "
+                    f"engine capacity {self.base_be.capacity}; raise "
+                    f"engine_capacity or lower the token budget")
+            need = self.pools["base"].blocks_for_tokens(len(prompt)) \
+                + self._headroom_blocks()
+            # each pool must cover at least one context_capacity-sized
+            # allotment (the admission-reservation unit), or no request
+            # could ever run to completion without self-exhausting
+            min_blocks = max(
+                need, self.pools["base"].blocks_for_tokens(
+                    min(self.context_capacity, worst)))
+            too_big = [w for w in ("base", "small")
+                       if min_blocks > self.pools[w].num_blocks]
+            if too_big:
+                raise RuntimeError(
+                    f"request {req.request_id} can never be admitted: "
+                    f"needs {min_blocks} blocks, pool(s) {too_big} hold "
+                    f"{[self.pools[w].num_blocks for w in too_big]}; "
+                    f"provision a larger KV budget or lower "
+                    f"context_capacity")
+            short = [w for w in ("base", "small")
+                     if self.pools[w].num_free < need]
+            if short:
+                req.blocked_reason = "; ".join(
+                    f"blocked: need {need} {w} blocks, have "
+                    f"{self.pools[w].num_free}" for w in short)
+                break
+            self.queue.popleft()
+            req.blocked_reason = None
+            if req.key is None:
+                key, req.key = jax.random.split(key)
+            st = SpecReasonStepState(key=req.key)
+            st.started_at = time.perf_counter()
+            a = _Active(req=req, state=st,
+                        base_row=self.base_be.alloc_row(),
+                        small_row=self.small_be.alloc_row(),
+                        base_seq=PagedSeq(self.pools["base"]),
+                        small_seq=PagedSeq(self.pools["small"]))
+            a.base_seq.append(len(prompt))
+            a.small_seq.append(len(prompt))
+            admitted.append(a)
+            prompts.append(prompt)
+        if admitted:
+            # batched prompt prefill: all newly admitted requests land in
+            # one length-bucketed call per engine
+            self.base_be.extend_rows([a.base_row for a in admitted], prompts)
+            self.small_be.extend_rows([a.small_row for a in admitted],
+                                      prompts)
+            for a in admitted:
+                a.state.phase = self.controller.think_phase(a.state)
+                self.active.append(a)
+
+    # ------------------------------------------------------------ blocks
+    def _grow(self, a: _Active, which: str, n_tokens: int) -> None:
+        """Grow a request's block table by n tokens; preempt the youngest
+        other request (recompute-style) if the pool is exhausted.  A
+        request that an earlier grow in the same batch loop preempted is
+        skipped — growing its freed table would leak the blocks."""
+        if n_tokens <= 0 or not a.alive:
+            return
+        seq = a.base_seq if which == "base" else a.small_seq
+        while True:
+            try:
+                seq.append(n_tokens)
+                return
+            except PoolExhausted:
+                victim = next((v for v in reversed(self.active)
+                               if v is not a and v.alive), None)
+                if victim is None:
+                    raise RuntimeError(
+                        f"{which} KV pool exhausted by a single request "
+                        f"({self.pools[which].num_blocks} blocks, "
+                        f"block_size {self.kv.block_size}); provision a "
+                        f"larger budget or lower the token budget") from None
+                self._preempt(victim)
+
+    def _preempt(self, victim: _Active) -> None:
+        self._release(victim)
+        victim.req.blocked_reason = "preempted: KV block pool exhausted"
+        self.queue.appendleft(victim.req)
+        self.preemptions += 1
+
+    def _release(self, a: _Active) -> None:
+        for snap, seq in ((a.b_seq_snap, a.base_seq),
+                          (a.s_seq_snap, a.small_seq)):
+            if snap is not None:
+                seq.discard_snapshot(snap)
+        a.b_seq_snap = a.s_seq_snap = None
+        a.base_seq.free()
+        a.small_seq.free()
+        self.base_be.free_row(a.base_row)
+        self.small_be.free_row(a.small_row)
+        a.alive = False
+        self.active = [x for x in self.active if x is not a]
+
+    # -------------------------------------------------------------- tick
+    def tick(self, key: jax.Array) -> bool:
+        """One continuous-batching turn: admit, then execute every active
+        request's current phase as per-phase batched calls.  Returns True
+        while there is work left."""
+        self.ticks += 1
+        self._admit(key)
+        # One tick = one reasoning step for every in-flight request: each
+        # phase batch is collected FRESH so a request drafted this tick is
+        # verified this tick (and, on reject, regenerated this tick) —
+        # requests stay phase-synchronized and every batched call is full.
+        # Call structure per tick: one small-model fused decode (every
+        # drafting request), one base-model scoring prefill (every
+        # verifying request), one base-model extend (accepted-step
+        # delimiters + </think> closers, deferred and merged), one
+        # base-model fused decode (fallback regenerations + final answers,
+        # distinguished by per-row stop sets), one small-model sync extend.
+        self._phase_acts("speculate", self._speculate_batch)
+        self._phase_acts("verify", self._verify_batch)
+        self._flush_close_batch()
+        fall = [a for a in self.active if a.state.phase == "fallback"]
+        ans = [a for a in self.active if a.state.phase == "answer"]
+        if fall or ans:
+            self._base_decode_batch(fall, ans)
+        self._finish()
+        return bool(self.active or self.queue)
+
+    def _phase_acts(self, phase: str, fn) -> None:
+        acts = [a for a in self.active if a.state.phase == phase]
+        if acts:
+            fn(acts)
+
+    def drain(self, key: jax.Array) -> List[Request]:
+        done_before = len(self.done)
+        while True:
+            key, sub = jax.random.split(key)
+            if not self.tick(sub):
+                break
+        return self.done[done_before:]
+
+    def _finish(self) -> None:
+        meters = {"base": self.base_be.meter.as_dict(),
+                  "small": self.small_be.meter.as_dict()}
+        for a in [x for x in self.active if x.state.phase == "done"]:
+            a.req.result = self.controller.result(a.state, meters=meters)
+            a.req.finished_at = time.perf_counter()
+            self.done.append(a.req)
+            self._release(a)
+
+    # ------------------------------------------------------ phase batches
+    def _split_keys(self, acts: List[_Active]) -> List[np.ndarray]:
+        """Advance every request's PRNG key with ONE vmapped split (a
+        per-request host split costs a full dispatch each; threefry splits
+        are row-independent so the batched result is bitwise the same)."""
+        # pad to the batch width so every phase reuses ONE compiled split
+        stacked = np.zeros((self.base_be.batch, 2), np.uint32)
+        for i, a in enumerate(acts):
+            stacked[i] = np.asarray(a.state.key)
+        split = np.asarray(self._split_jit(jnp.asarray(stacked)))
+        subs = []
+        for a, row in zip(acts, split):
+            a.state.key = row[0]
+            subs.append(row[1])
+        return subs
+
+    def _speculate_batch(self, acts: List[_Active]) -> None:
+        ctrl, cfg = self.controller, self.controller.cfg
+        acts = [a for a in acts if a.alive]
+        keys = self._split_keys(acts)
+        rows, budgets = [], []
+        for a in acts:
+            st = a.state
+            a.b_snap = self.base_be.snapshot_row(a.base_row)
+            a.s_snap = self.small_be.snapshot_row(a.small_row)
+            a.b_seq_snap = a.base_seq.snapshot()
+            a.s_seq_snap = a.small_seq.snapshot()
+            rows.append(a.small_row)
+            budgets.append(ctrl.max_step_tokens(st))
+        outs = self.small_be.generate_rows(
+            rows, budgets, ctrl.segmenter.stop_ids, cfg.sampling, keys)
+        for a, ids in zip(acts, outs):
+            a.state.draft_ids = ids
+            a.state.phase = "verify"
+            self._grow(a, "small", len(ids))
+
+    def _verify_batch(self, acts: List[_Active]) -> None:
+        ctrl = self.controller
+        seg = ctrl.segmenter
+        verifier = ctrl.verifier
+        acts = [a for a in acts if a.alive]
+        judge: List[_Active] = []
+        for a in acts:
+            ids = a.state.draft_ids
+            a.end = seg.classify_end(ids)
+            a.body = seg.body(ids)
+            if a.body and a.end in ("step", "final", "runaway"):
+                judge.append(a)
+            else:
+                self._reject(a, 0.0)
+        if not judge:
+            return
+        # ONE batched scoring prefill for the whole verify batch: each
+        # row extends [body..., <score>]; the per-position logits give the
+        # body logprobs AND the score readout of every request.  (The
+        # sequential verifier uses two calls so its returned session needs
+        # no position surgery; here the score token is dropped from every
+        # row afterwards — same cache discipline, same math.)
+        rows = [a.base_row for a in judge]
+        prev_logits = [self.base_be.last_logits[r].copy() for r in rows]
+        all_logits = self.base_be.extend_rows(
+            rows, [a.body + [verifier.score_token] for a in judge],
+            want_logits=True)
+        for a in judge:
+            self._grow(a, "base", len(a.body))
+        entries = [(a, prev, al) for a, prev, al
+                   in zip(judge, prev_logits, all_logits)
+                   if a.alive]                   # _grow may have preempted
+        for a, prev, al in entries:
+            body_logits, score_row = al[:-1], al[-1]
+            a.mean_lp = mean_body_logprob(prev, body_logits, a.body)
+            # drop the score token from the context (the verifier's state
+            # discipline: the returned context stops after the body)
+            self.base_be.pos[a.base_row] -= 1
+            self.base_be.last_logits[a.base_row] = body_logits[-1]
+            utility, _ = verifier.utility_from_score_logits(score_row)
+            verdict, utility = ctrl.judge_draft(utility, a.mean_lp)
+            if verdict.accept:
+                delim = ctrl.note_accept(a.state, a.body, a.end, utility)
+                a.base_seq.discard_snapshot(a.b_seq_snap)
+                a.small_seq.discard_snapshot(a.s_seq_snap)
+                a.b_seq_snap = a.s_seq_snap = None
+                # delimiter owed to the base context; flushed in this
+                # tick's merged close/delim extend
+                a.pending_base.append(delim)
+            else:
+                self._reject(a, utility)
+
+    def _reject(self, a: _Active, utility: float) -> None:
+        """Roll both contexts back to the step boundary: O(1) row truncate
+        + block-table restore (frees the orphaned speculation blocks)."""
+        self.base_be.restore_row(a.base_row, a.b_snap)
+        self.small_be.restore_row(a.small_row, a.s_snap)
+        a.base_seq.restore(a.b_seq_snap)
+        a.small_seq.restore(a.s_seq_snap)
+        a.b_seq_snap = a.s_seq_snap = None
+        self.controller.note_reject(a.state, a.body, utility)
+
+    def _base_decode_batch(self, fall: List[_Active],
+                           ans: List[_Active]) -> None:
+        """The tick's single base-model decode: fallback regenerations
+        (stop at step boundaries) and final answers (stop at eos) run as
+        one fused multi-sequence call with per-row stop sets/budgets."""
+        ctrl, cfg = self.controller, self.controller.cfg
+        fall = [a for a in fall if a.alive]
+        ans = [a for a in ans if a.alive]
+        acts = fall + ans
+        if not acts:
+            return
+        keys = self._split_keys(acts)
+        rows = [a.base_row for a in acts]
+        budgets = [ctrl.max_step_tokens(a.state) for a in fall] \
+            + [cfg.answer_max_tokens] * len(ans)
+        stops = [ctrl.segmenter.stop_ids] * len(fall) + [[tk.EOS]] * len(ans)
+        outs = self.base_be.generate_rows(rows, budgets, [], cfg.sampling,
+                                          keys, stop_ids_rows=stops)
+        for a, ids in zip(acts, outs):
+            self._grow(a, "base", len(ids))
+        fall2 = [(a, ids) for a, ids in zip(fall, outs[:len(fall)])
+                 if a.alive]
+        if fall2:
+            # keep the small model's context in sync, batched
+            self.small_be.extend_rows([a.small_row for a, _ in fall2],
+                                      [ids for _, ids in fall2])
+            for a, ids in fall2:
+                self._grow(a, "small", len(ids))
+        for a, ids in fall2:
+            if a.alive:
+                ctrl.note_base_step(a.state, ids)
+        for a, ids in zip(ans, outs[len(fall):]):
+            if a.alive:
+                a.state.answer_ids = ids
+                a.state.phase = "done"
+
+    def _flush_close_batch(self) -> None:
+        """Move closing requests to the answer phase and flush every owed
+        base-context token (accepted-step delimiters, budget-exhaustion
+        </think> closers) in ONE merged base extend.  The small context is
+        deliberately NOT closed: a closed request never drafts again, so
+        the sequential controller's small-side </think> extend is dead
+        work here (outputs are unaffected — tested)."""
+        items: List[_Active] = []
+        for a in self.active:
+            if not a.alive:
+                continue
+            if a.state.phase == "close":
+                if not a.state.done_thinking:
+                    a.state.thinking += [tk.THINK_END]
+                    a.pending_base.append(tk.THINK_END)
+                a.state.phase = "answer"
+            if a.pending_base:
+                items.append(a)
+        if not items:
+            return
+        self.base_be.extend_rows([a.base_row for a in items],
+                                 [a.pending_base for a in items])
+        for a in items:
+            self._grow(a, "base", len(a.pending_base))
+            a.pending_base = []
+
+    # ------------------------------------------------------------- stats
+    def pool_utilization(self) -> Dict[str, float]:
+        return {w: p.num_used / p.num_blocks for w, p in self.pools.items()}

@@ -1,0 +1,94 @@
+"""Workload driving for the serving benchmarks and the serve CLI: Poisson
+(or burst) arrivals pumped through either scheduler regime, plus summary
+statistics (req/s, tok/s, latency percentiles)."""
+
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from ..data.tasks import Task
+from .scheduler import ContinuousScheduler, Request, Scheduler
+
+
+def poisson_arrivals(n: int, rate: float, rng: random.Random) -> List[float]:
+    """Cumulative arrival offsets (seconds).  rate <= 0 => burst at t=0."""
+    if rate <= 0:
+        return [0.0] * n
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate)
+        out.append(t)
+    return out
+
+
+def _pump(sched, key: jax.Array) -> bool:
+    """Advance the scheduler by one unit of work; False if it made no
+    progress (idle, or queue admission-blocked with nothing in flight) so
+    the driver can surface the stall instead of spinning."""
+    if isinstance(sched, ContinuousScheduler):
+        done_before = len(sched.done)
+        sched.tick(key)
+        return bool(sched.active) or len(sched.done) > done_before
+    return sched.step(key) is not None
+
+
+def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
+                 arrivals: Sequence[float],
+                 key: Optional[jax.Array] = None) -> List[Request]:
+    """Submit ``pairs`` at their arrival offsets and drive ``sched`` (either
+    regime) until every request finishes.  Returns the request handles in
+    submission order."""
+    assert len(pairs) == len(arrivals)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    handles: List[Request] = []
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < len(pairs) and arrivals[i] <= now:
+            task, k = pairs[i]
+            handles.append(sched.submit(task, key=k))
+            i += 1
+        done = i >= len(pairs) and all(h.result is not None for h in handles)
+        if done:
+            return handles
+        key, sub = jax.random.split(key)
+        if not _pump(sched, sub):
+            if i < len(pairs):
+                # idle until the next arrival
+                wait = arrivals[i] - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+            else:
+                # queue non-empty but admission-blocked: surface why
+                blocked = [h.blocked_reason for h in handles
+                           if h.result is None and h.blocked_reason]
+                raise RuntimeError(
+                    f"scheduler stalled: {blocked or 'unknown reason'}")
+
+
+def percentile(sorted_vals: List[float], p: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(int(round(p * (len(sorted_vals) - 1))), len(sorted_vals) - 1)
+    return sorted_vals[idx]
+
+
+def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
+    lats = sorted(h.e2e_latency for h in handles if h.e2e_latency is not None)
+    toks = sum(len(h.result.thinking_ids) + len(h.result.answer_ids)
+               for h in handles if h.result is not None)
+    n = len(lats)
+    return {
+        "requests": n,
+        "wall_s": round(wall_s, 4),
+        "req_s": round(n / wall_s, 3) if wall_s > 0 else 0.0,
+        "tok_s": round(toks / wall_s, 2) if wall_s > 0 else 0.0,
+        "p50_latency_s": round(percentile(lats, 0.50), 4),
+        "p95_latency_s": round(percentile(lats, 0.95), 4),
+        "mean_latency_s": round(sum(lats) / n, 4) if n else 0.0,
+    }

@@ -174,6 +174,35 @@ def test_verifier_score_prompt_format_matches_training(pair):
     assert base.meter.prefill_calls == 2
 
 
+def test_state_machine_resumable_matches_run(pair):
+    """run() is just the state machine driven to completion: advancing a
+    SpecReasonStepState one phase at a time (as the continuous scheduler
+    does, interleaved with other requests) yields the identical result."""
+    base, small = pair
+    sr = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=40, max_steps=5))
+    res = sr.run(_prompt(), jax.random.PRNGKey(4))
+
+    st = sr.begin(_prompt(), jax.random.PRNGKey(4))
+    phases = [st.phase]
+    while st.phase != "done":
+        sr.advance(st)
+        phases.append(st.phase)
+    stepped = sr.result(st)
+    assert stepped.thinking_ids == res.thinking_ids
+    assert stepped.answer_ids == res.answer_ids
+    assert [ (s.source, s.accepted, s.tokens) for s in stepped.steps] == \
+        [(s.source, s.accepted, s.tokens) for s in res.steps]
+    # the phase trace is a well-formed speculate->verify->... pipeline
+    assert phases[0] in ("speculate", "fallback")
+    assert phases[-1] == "done" and "answer" in phases
+    for prev, cur in zip(phases, phases[1:]):
+        if prev == "speculate":
+            assert cur == "verify"
+        if prev == "verify":
+            assert cur in ("speculate", "fallback", "close")
+
+
 def test_overlapped_speculation(pair):
     """Overlapped mode pre-drafts step k+1 during step k's verification:
     with an accept-all policy the result must contain the same kind of

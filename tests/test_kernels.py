@@ -9,7 +9,10 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
+from repro.serving.paged_kv import (PagedKVPool, PagedKVStore, PagedSeq,
+                                    pad_block_tables)
 
 
 def _tol(dtype):
@@ -76,6 +79,127 @@ def test_decode_attention_ragged_lengths():
     exp = ref.decode_reference(q, kc, vc, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("lens", [
+    # ragged batch > 1: per-row lengths from the scalar-prefetch path,
+    # including block-boundary (256-block multiples), sub-block, and
+    # full-cache rows in ONE compiled kernel
+    [7, 256, 511, 512],
+    [1, 1, 1, 1],
+    [512, 300, 256, 255],
+    [33, 257, 128, 64],
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_batch_ragged_sweep(lens, dtype):
+    """Batch > 1 with ragged per-row context lengths — the continuous
+    batching regime (previously only exercised at batch 1)."""
+    b, h, kh, s, hd = 4, 8, 2, 512, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, kh, s, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, kh, s, hd), dtype)
+    lens_arr = jnp.asarray(lens, jnp.int32)
+    out = decode_attention(q, kc, vc, lens_arr, interpret=True)
+    exp = ref.decode_reference(q, kc, vc, lens_arr)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_batch_ragged_matches_per_row():
+    """Each row of a ragged batched call equals its own batch-1 call —
+    rows cannot bleed into each other through the block grid."""
+    b, h, kh, s, hd = 3, 4, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, kh, s, hd))
+    vc = jax.random.normal(ks[2], (b, kh, s, hd))
+    lens = jnp.array([40, 256, 129], jnp.int32)
+    out = decode_attention(q, kc, vc, lens, interpret=True)
+    for i in range(b):
+        solo = decode_attention(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                lens[i:i + 1], interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(solo[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ paged decode
+
+
+@pytest.mark.parametrize("b,h,kh,hd,bs,nb", [
+    (2, 4, 2, 64, 128, 4),     # GQA 2:1
+    (3, 8, 2, 32, 128, 3),     # GQA 4:1
+    (1, 2, 2, 128, 256, 2),    # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(b, h, kh, hd, bs, nb, dtype):
+    """Paged flash-decode (block tables via scalar prefetch) against the
+    gather-then-dense oracle, ragged lengths."""
+    pages = 2 + b * nb
+    ks = jax.random.split(jax.random.PRNGKey(13), 4)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kp = jax.random.normal(ks[1], (pages, kh, bs, hd), dtype)
+    vp = jax.random.normal(ks[2], (pages, kh, bs, hd), dtype)
+    # each row gets distinct pages (pool-style allocation)
+    tbl = jnp.arange(2, 2 + b * nb, dtype=jnp.int32).reshape(b, nb)
+    lens = jax.random.randint(ks[3], (b,), 1, nb * bs + 1)
+    out = paged_decode_attention(q, kp, vp, tbl, lens, interpret=True)
+    exp = ref.paged_decode_reference(q, kp, vp, tbl, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_shared_prefix_pages():
+    """Rows may alias pages (shared prompt prefix / copy-on-write
+    snapshots): the kernel only reads, so aliased tables must be exact."""
+    b, h, kh, hd, bs = 3, 4, 2, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(14), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kp = jax.random.normal(ks[1], (8, kh, bs, hd))
+    vp = jax.random.normal(ks[2], (8, kh, bs, hd))
+    # all rows share pages 1,2 as their prefix
+    tbl = jnp.array([[1, 2, 3], [1, 2, 4], [1, 2, 5]], jnp.int32)
+    lens = jnp.array([260, 300, 384], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, tbl, lens, interpret=True)
+    exp = ref.paged_decode_reference(q, kp, vp, tbl, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_matches_dense_kernel_via_store():
+    """End-to-end paged layout: tokens scattered into a PagedKVStore via
+    block tables gather to the same attention output as the dense
+    flash-decode kernel on the equivalent contiguous cache."""
+    kh, hd, bs = 2, 32, 128
+    pool = PagedKVPool(num_blocks=8, block_size=bs)
+    store = PagedKVStore(pool, n_layers=1, kv_heads=kh, head_dim=hd)
+    lens = [150, 260]
+    seqs = []
+    ks = jax.random.split(jax.random.PRNGKey(15), 1 + 2 * len(lens))
+    dense_k, dense_v = [], []
+    for i, n in enumerate(lens):
+        seq = PagedSeq(pool)
+        seq.append(n)
+        k = jax.random.normal(ks[1 + 2 * i], (1, n, kh, hd))
+        v = jax.random.normal(ks[2 + 2 * i], (1, n, kh, hd))
+        store.scatter(seq, k, v, start=0)
+        seqs.append(seq)
+        dense_k.append(k[0])
+        dense_v.append(v[0])
+    q = jax.random.normal(ks[0], (len(lens), 4, hd))
+    tbl = jnp.asarray(pad_block_tables(seqs))
+    lens_arr = jnp.asarray(lens, jnp.int32)
+    out = paged_decode_attention(q, store.k_pages[0], store.v_pages[0],
+                                 tbl, lens_arr, interpret=True)
+    # dense twin: right-pad each row's contiguous cache to a shared S
+    s = tbl.shape[1] * bs
+    kc = jnp.stack([jnp.pad(k, ((0, s - k.shape[0]), (0, 0), (0, 0)))
+                    for k in dense_k]).transpose(0, 2, 1, 3)
+    vc = jnp.stack([jnp.pad(v, ((0, s - v.shape[0]), (0, 0), (0, 0)))
+                    for v in dense_v]).transpose(0, 2, 1, 3)
+    exp = decode_attention(q, kc, vc, lens_arr, block_k=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("b,l,h,p,g,n,chunk", [

@@ -1,0 +1,163 @@
+"""Paged KV subsystem: block pool accounting, copy-on-write snapshots,
+orphan freeing on rollback, the physical page store, and the block-count
+KVManager."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import testbed
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.paged_kv import (PagedKVPool, PagedKVStore, PagedSeq,
+                                    PoolExhausted, pad_block_tables)
+
+
+def test_pool_alloc_release_refcount():
+    pool = PagedKVPool(num_blocks=4, block_size=8)
+    a, b = pool.alloc(), pool.alloc()
+    assert pool.num_free == 2 and pool.num_used == 2
+    pool.retain(a)
+    pool.release(a)
+    assert pool.num_free == 2          # still referenced once
+    pool.release(a)
+    assert pool.num_free == 3
+    pool.release(b)
+    assert pool.num_free == 4
+
+
+def test_pool_exhaustion_raises():
+    pool = PagedKVPool(num_blocks=2, block_size=8)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+
+
+def test_seq_append_allocates_blocks():
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    seq = PagedSeq(pool)
+    new, copies = seq.append(6)        # 6 tokens -> 2 blocks
+    assert len(new) == 2 and not copies
+    new, copies = seq.append(2)        # fills block 2, no new block
+    assert not new and not copies
+    new, _ = seq.append(1)             # 9th token -> 3rd block
+    assert len(new) == 1
+    assert seq.length == 9 and len(seq.blocks) == 3
+
+
+def test_seq_append_exhaustion_rolls_back_partial_grow():
+    pool = PagedKVPool(num_blocks=2, block_size=4)
+    seq = PagedSeq(pool)
+    seq.append(4)
+    with pytest.raises(PoolExhausted):
+        seq.append(8)                  # needs 2 more blocks, only 1 free
+    assert seq.length == 4 and len(seq.blocks) == 1
+    assert pool.num_free == 1          # the partial grow was rolled back
+
+
+def test_snapshot_rollback_frees_orphans():
+    """SpecReason reject path: restore the block table, free the blocks
+    the rejected speculation grew into."""
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    seq = PagedSeq(pool)
+    seq.append(8)                      # 2 blocks
+    snap = seq.snapshot()
+    assert pool.refcount(seq.blocks[0]) == 2
+    seq.append(9)                      # speculation: 3 more blocks
+    used_before = pool.num_used
+    freed = seq.restore(snap)
+    assert seq.length == 8 and len(seq.blocks) == 2
+    assert len(freed) == 3
+    assert pool.num_used == used_before - 3
+    assert pool.refcount(seq.blocks[0]) == 1   # snapshot ref consumed
+
+
+def test_snapshot_copy_on_write_partial_tail():
+    """Appending into a snapshot-shared partial tail block must copy it
+    first (the snapshot's view is immutable)."""
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    seq = PagedSeq(pool)
+    seq.append(6)                      # tail block half full
+    tail = seq.blocks[-1]
+    snap = seq.snapshot()
+    new, copies = seq.append(1)        # writes into the shared tail
+    assert copies and copies[0][0] == tail
+    assert seq.blocks[-1] != tail      # detached onto a fresh block
+    assert pool.refcount(tail) == 1    # only the snapshot holds it now
+    seq.discard_snapshot(snap)
+    assert pool.refcount(tail) == 0
+
+
+def test_store_scatter_gather_roundtrip_and_sharing():
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    store = PagedKVStore(pool, n_layers=2, kv_heads=2, head_dim=8)
+    seq = PagedSeq(pool)
+    seq.append(10)
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 10, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 2, 8))
+    store.scatter(seq, k, v, start=0)
+    for layer in range(2):
+        kd, vd = store.gather(seq, layer)
+        np.testing.assert_allclose(np.asarray(kd), np.asarray(k[layer]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vd), np.asarray(v[layer]),
+                                   rtol=1e-6, atol=1e-6)
+    # CoW append: the copy list keeps the snapshot's view intact
+    snap = seq.snapshot()
+    k2 = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 2, 8))
+    _, copies = seq.append(3)
+    store.apply_copies(copies)
+    store.scatter(seq, k2, k2, start=10)
+    kd, _ = store.gather(seq, 0)
+    np.testing.assert_allclose(np.asarray(kd[10:13]), np.asarray(k2[0]),
+                               rtol=1e-6, atol=1e-6)
+    # the snapshot still gathers the ORIGINAL 10 tokens
+    seq2 = PagedSeq(pool)
+    seq2.blocks, seq2.length = list(snap.blocks), snap.length
+    kd_snap, _ = store.gather(seq2, 0)
+    np.testing.assert_allclose(np.asarray(kd_snap), np.asarray(k[0]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pad_block_tables():
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    s1, s2 = PagedSeq(pool), PagedSeq(pool)
+    s1.append(9)
+    s2.append(3)
+    tbl = pad_block_tables([s1, s2])
+    assert tbl.shape == (2, 3)
+    assert list(tbl[0]) == s1.blocks
+    assert list(tbl[1][:1]) == s2.blocks and tbl[1][1] == 0
+
+
+# ---------------------------------------------------------- kv manager
+
+
+def test_kv_manager_block_accounting():
+    kv = KVManager(testbed.BASE, testbed.SMALL,
+                   KVBudget(total_bytes=10_000_000, base_fraction=0.8))
+    cap_blocks = kv.capacity_blocks("base")
+    assert cap_blocks > 0
+    assert kv.free_blocks("base") == cap_blocks
+    assert kv.allocate("r1:b", "base", kv.block_size * 3)
+    assert kv.used_blocks["base"] == 3
+    kv.release("r1:b")
+    assert kv.used_blocks["base"] == 0
+    # allocations quantize to whole blocks
+    assert kv.allocate("r2:b", "base", 1)
+    assert kv.used_blocks["base"] == 1
+    kv.release("r2:b")
+
+
+def test_kv_manager_release_idempotent():
+    """Double-release / unknown-session release must be a no-op (the
+    scheduler's error paths release defensively)."""
+    kv = KVManager(testbed.BASE, testbed.SMALL,
+                   KVBudget(total_bytes=10_000_000))
+    assert kv.allocate("s1", "base", 64)
+    used = kv.used_blocks["base"]
+    kv.release("s1")
+    kv.release("s1")                   # second release: no-op
+    kv.release("never-allocated")      # unknown: no-op
+    assert kv.used_blocks["base"] == 0
+    assert used > 0

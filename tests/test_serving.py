@@ -1,4 +1,5 @@
-"""KV manager + scheduler behavior."""
+"""KV manager + scheduler behavior: sequential admission, and the
+continuous-batching scheduler's per-request equivalence with it."""
 
 import jax
 import pytest
@@ -10,10 +11,11 @@ from repro.core.policies import StaticThreshold
 from repro.data import tasks
 from repro.models.config import ModelConfig
 from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
 from repro.serving.engine import Engine
 from repro.serving.kv_manager import (KVBudget, KVManager, kv_bytes_per_token,
                                       ssm_state_bytes)
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import ContinuousScheduler, Scheduler
 from repro.tokenizer import toy as tk
 
 
@@ -43,20 +45,26 @@ def test_kv_manager_admission_and_release():
     assert 0.0 < kv.utilization()["base"] <= 1.0
 
 
-def test_scheduler_serves_fifo():
-    base_cfg = ModelConfig(name="sb", family="dense", n_layers=2, d_model=64,
-                           n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
-                           vocab_size=tk.VOCAB_SIZE)
-    small_cfg = ModelConfig(name="ss", family="dense", n_layers=1, d_model=32,
-                            n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
-                            vocab_size=tk.VOCAB_SIZE)
-    base = Engine(Model(base_cfg), Model(base_cfg).init(jax.random.PRNGKey(0)),
-                  max_len=256)
-    small = Engine(Model(small_cfg),
-                   Model(small_cfg).init(jax.random.PRNGKey(1)), max_len=256)
+BASE_CFG = ModelConfig(name="sb", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=tk.VOCAB_SIZE).validate()
+SMALL_CFG = ModelConfig(name="ss", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    return (Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256),
+            Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256))
+
+
+def test_scheduler_serves_fifo(engine_pair):
+    base, small = engine_pair
     ctrl = SpecReason(base, small, SpecReasonConfig(
         policy=StaticThreshold(5.0), token_budget=16, max_steps=2))
-    kv = KVManager(base_cfg, small_cfg, KVBudget(total_bytes=1 << 26))
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
     sched = Scheduler(ctrl, kv, context_capacity=256)
 
     rng = random.Random(0)
@@ -68,3 +76,125 @@ def test_scheduler_serves_fifo():
         assert d.result is not None and d.e2e_latency > 0
     # all KV released after drain
     assert kv.utilization() == {"base": 0.0, "small": 0.0}
+
+
+def test_drain_surfaces_admission_block_reason(engine_pair):
+    """An admission-blocked drain must say WHY on the queued request
+    ("blocked: ... needs N tokens, has M"), not just return None."""
+    base, small = engine_pair
+    ctrl = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=16, max_steps=2))
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=200_000))
+    cap = 4096                          # cannot fit the tiny budget
+    sched = Scheduler(ctrl, kv, context_capacity=cap)
+    req = sched.submit(tasks.sample_task(random.Random(0)))
+    done = sched.drain(jax.random.PRNGKey(0))
+    assert done == []
+    assert req.blocked_reason is not None
+    assert "blocked" in req.blocked_reason
+    assert str(cap) in req.blocked_reason       # need
+    assert str(kv.max_context("base")) in req.blocked_reason  # have
+    # shrinking the capacity clears the block
+    sched.context_capacity = 64
+    done = sched.drain(jax.random.PRNGKey(0))
+    assert len(done) == 1 and done[0].blocked_reason is None
+
+
+# ---------------------------------------------------------- continuous
+
+
+def _run_pair_workloads(engine_pair, n_requests=4, temperature=0.0,
+                        threshold=5.0, seed=0, max_batch=4, kv_bytes=1 << 26,
+                        kv_fraction=0.8, context_capacity=128):
+    """Run the same workload sequentially (controller.run) and through the
+    continuous scheduler; return (sequential results, request handles,
+    scheduler)."""
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
+                           token_budget=48, max_steps=6,
+                           sampling=SamplingParams(temperature=temperature))
+    ctrl = SpecReason(base, small, cfg)
+    rng = random.Random(seed)
+    reqs = [tasks.sample_task(rng) for _ in range(n_requests)]
+    keys = [jax.random.PRNGKey(100 * seed + i) for i in range(n_requests)]
+    seq = [ctrl.run(tasks.question_tokens(t), k)
+           for t, k in zip(reqs, keys)]
+    kv = KVManager(BASE_CFG, SMALL_CFG,
+                   KVBudget(total_bytes=kv_bytes,
+                            base_fraction=kv_fraction))
+    cs = ContinuousScheduler(ctrl, kv, max_batch=max_batch,
+                             context_capacity=context_capacity)
+    handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    cs.drain(jax.random.PRNGKey(9))
+    return seq, handles, cs
+
+
+def test_continuous_greedy_equivalent_to_sequential(engine_pair):
+    """The acceptance bar: a 4-request greedy workload served by the
+    continuous-batching scheduler produces, per request, IDENTICAL
+    thinking tokens, step records and answers to the sequential regime."""
+    seq, handles, cs = _run_pair_workloads(engine_pair)
+    assert len(cs.done) == 4
+    for r_seq, h in zip(seq, handles):
+        r_cb = h.result
+        assert r_cb is not None
+        assert r_cb.thinking_ids == r_seq.thinking_ids
+        assert r_cb.answer_ids == r_seq.answer_ids
+        assert len(r_cb.steps) == len(r_seq.steps)
+        for a, b in zip(r_cb.steps, r_seq.steps):
+            assert (a.source, a.accepted, a.tokens) == \
+                (b.source, b.accepted, b.tokens)
+    # every row and block released
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
+    assert cs.base_be.free_rows == cs.base_be.batch
+    assert cs.small_be.free_rows == cs.small_be.batch
+
+
+def test_continuous_sampled_equivalent_to_sequential(engine_pair):
+    """Per-request PRNG keys advance in the sequential split order, so
+    even SAMPLED workloads are token-equivalent."""
+    seq, handles, _ = _run_pair_workloads(engine_pair, temperature=0.8,
+                                          seed=3)
+    for r_seq, h in zip(seq, handles):
+        assert h.result.thinking_ids == r_seq.thinking_ids
+        assert h.result.answer_ids == r_seq.answer_ids
+
+
+def test_continuous_preemption_recovers(engine_pair):
+    """A pool too small for the whole workload preempts (recompute-style:
+    youngest victim loses its blocks and requeues) but still finishes
+    every request with the right outputs."""
+    # ~10 base blocks: two-ish requests fit at once
+    seq, handles, cs = _run_pair_workloads(
+        engine_pair, n_requests=4, kv_bytes=90_000, kv_fraction=0.5,
+        max_batch=4)
+    assert cs.preemptions > 0
+    assert len(cs.done) == 4
+    for r_seq, h in zip(seq, handles):
+        assert h.result.thinking_ids == r_seq.thinking_ids
+        assert h.result.answer_ids == r_seq.answer_ids
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
+
+
+def test_continuous_refuses_unservable_request(engine_pair):
+    """A request whose worst-case context exceeds the engine row capacity
+    is refused at admission with a clear error — not a mid-serve row
+    overflow."""
+    base, small = engine_pair
+    ctrl = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=220, max_steps=50,
+        sampling=SamplingParams(temperature=0.0)))
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    cs = ContinuousScheduler(ctrl, kv, max_batch=2, context_capacity=256)
+    cs.submit(tasks.sample_task(random.Random(0)),
+              key=jax.random.PRNGKey(0))
+    with pytest.raises(RuntimeError, match="can never be served"):
+        cs.drain(jax.random.PRNGKey(1))
+
+
+def test_continuous_rejects_unsupported_modes(engine_pair):
+    base, small = engine_pair
+    ctrl = SpecReason(base, small, SpecReasonConfig(use_spec_decode=True))
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    with pytest.raises(NotImplementedError):
+        ContinuousScheduler(ctrl, kv)
