@@ -1,0 +1,190 @@
+"""Hierarchical-speculation serving benchmark: SpecReason-only continuous
+batching vs SpecReason + batched token-level spec decode (§4.2's
+composition) at concurrency 1/4/8.
+
+What is measured: the same Poisson/burst workload served twice by the
+continuous scheduler — once with the tick's fallback+answer decode as the
+plain fused multi-sequence loop (SpecReason-only), once routed through
+``serving.spec_engine`` (hierarchical).  The req/s ratio is the §4.2
+"additional speedup from composing step-level and token-level
+speculation", measured at serving level.
+
+Regime note (why the default pair is testbed BASE + the micro drafter):
+token-level speculation pays when the *base model's per-token decode
+cost* dominates the draft cost and the per-round dispatches — the
+paper's accelerators are in that regime.  The default ``hier`` pair
+(testbed-base + testbed-micro-small, ~40x per-token FLOPs ratio) is its
+testbed analog: the verification prefill amortizes the base's weight
+traffic over gamma+1 positions while the drafter's serial steps are
+near-free.  The all-micro pair is deliberately dispatch-bound (it exists
+to isolate scheduler overhead, see bench_serving.py) — in that regime NO
+token-level speculation can win, hierarchical included; ``--pair micro``
+still lets you measure it.
+
+Weights are random-init (loading/training checkpoints would dominate CI
+time), so the draft is an *untrained* speculator: the benchmark runs
+sampled decoding where acceptance follows the min(p,q) overlap of the
+two distributions.  The default ``--temperature 12`` flattens both
+distributions enough that the untrained drafter stands in for an
+*aligned trained* one (measured acceptance ~0.75 at gamma 7-8 — what a
+trained pair reaches at the paper's temperature 0.6); the measured
+acceptance rate and mean accepted length are reported alongside
+throughput, and the workload is fallback/answer-heavy (high threshold,
+long answers) so the compared phase dominates.
+
+  PYTHONPATH=src python benchmarks/bench_hierspec.py
+  PYTHONPATH=src python benchmarks/bench_hierspec.py --reps 2 -n 8 --gamma 6
+
+Emits BENCH_hierspec.json: per-concurrency {specreason, hierspec} req/s,
+tok/s, latency percentiles, acceptance stats and the hierspec/specreason
+speedup.  CI gates on hierarchical >= SpecReason-only req/s at
+concurrency 4.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+import jax
+
+from repro.configs import testbed
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.workload import poisson_arrivals, run_workload, summarize
+
+MAX_LEN = 512
+
+PAIRS = {
+    # base-heavy + near-free drafter: the accelerator regime (~40x)
+    "hier": (testbed.BASE, testbed.MICRO_SMALL),
+    "testbed": (testbed.BASE, testbed.SMALL),   # the trained-scale pair
+    "micro": (testbed.MICRO, testbed.MICRO_SMALL),  # dispatch-bound probe
+}
+
+
+def _mk_controller(pair: str, temperature: float, threshold: float,
+                   budget: int, answer_tokens: int, gamma: int
+                   ) -> SpecReason:
+    base_cfg, small_cfg = PAIRS[pair]
+    bm, sm = Model(base_cfg), Model(small_cfg)
+    base = Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=MAX_LEN,
+                  name="hier-base")
+    small = Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=MAX_LEN,
+                   name="hier-small")
+    cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
+                           token_budget=budget, max_steps=6,
+                           answer_max_tokens=answer_tokens,
+                           spec_gamma=gamma,
+                           sampling=SamplingParams(temperature=temperature))
+    return SpecReason(base, small, cfg)
+
+
+def _workload(n: int, seed: int, rate: float):
+    rng = random.Random(seed)
+    pairs = [(tasks.sample_task(rng), jax.random.PRNGKey(1000 + i))
+             for i in range(n)]
+    return pairs, poisson_arrivals(n, rate, rng)
+
+
+def _bench(make_sched, pairs, arrivals, reps: int):
+    """Best-of-reps on ONE scheduler (rep 0 = compile warmup)."""
+    best = None
+    sched = make_sched()
+    for rep in range(reps + 1):
+        t0 = time.perf_counter()
+        handles = run_workload(sched, pairs, arrivals,
+                               key=jax.random.PRNGKey(rep))
+        wall = time.perf_counter() - t0
+        stats = summarize(handles, wall)
+        if rep == 0:
+            continue
+        if best is None or stats["req_s"] > best["req_s"]:
+            best = stats
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("-n", "--num-requests", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--arrival-rate", type=float, default=0.0)
+    ap.add_argument("--concurrency", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--pair", choices=tuple(PAIRS), default="hier")
+    ap.add_argument("--gamma", type=int, default=7,
+                    help="draft tokens per round; gamma = 2^k - 1 packs "
+                         "the [pending]+chunk verification prefill into "
+                         "an exact bucket")
+    ap.add_argument("--temperature", type=float, default=12.0,
+                    help="sampling temperature; high values flatten the "
+                         "random-init pair's distributions so the "
+                         "untrained drafter reaches trained-pair "
+                         "acceptance rates (see module docstring)")
+    ap.add_argument("--threshold", type=float, default=8.5,
+                    help="acceptance threshold; high = fallback-heavy "
+                         "(the §4.2 regime where token-level speculation "
+                         "carries the decode)")
+    ap.add_argument("--budget", type=int, default=48)
+    ap.add_argument("--answer-tokens", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_hierspec.json")
+    args = ap.parse_args(argv)
+    if args.num_requests < 1 or args.reps < 1:
+        ap.error("-n and --reps must be >= 1")
+
+    ctrl = _mk_controller(args.pair, args.temperature, args.threshold,
+                          args.budget, args.answer_tokens, args.gamma)
+    base_cfg = ctrl.base.model.cfg
+    small_cfg = ctrl.small.model.cfg
+    pairs, arrivals = _workload(args.num_requests, args.seed,
+                                args.arrival_rate)
+
+    rows = {}
+    for conc in args.concurrency:
+        def make(spec, c=conc):
+            kv = KVManager(base_cfg, small_cfg,
+                           KVBudget(total_bytes=1 << 27))
+            return ContinuousScheduler(ctrl, kv, max_batch=c,
+                                       context_capacity=MAX_LEN // 2,
+                                       spec_decode=spec, gamma=args.gamma)
+        plain = _bench(lambda: make(False), pairs, arrivals, args.reps)
+        hier = _bench(lambda: make(True), pairs, arrivals, args.reps)
+        speedup = hier["req_s"] / plain["req_s"] if plain["req_s"] else 0.0
+        rows[str(conc)] = {"specreason": plain, "hierspec": hier,
+                           "speedup": round(speedup, 3)}
+        print(f"c={conc:<3d} specreason {plain['req_s']:7.3f} req/s | "
+              f"hierspec {hier['req_s']:7.3f} req/s "
+              f"(acc={hier.get('spec_acceptance_rate', 0.0):.2f}, "
+              f"len={hier.get('spec_mean_accepted_len', 0.0):.2f}) | "
+              f"speedup {speedup:5.2f}x")
+
+    out = {
+        "bench": "hierspec",
+        "models": [base_cfg.name, small_cfg.name],
+        "pair": args.pair,
+        "gamma": args.gamma,
+        "temperature": args.temperature,
+        "threshold": args.threshold,
+        "num_requests": args.num_requests,
+        "reps": args.reps,
+        "backend": jax.default_backend(),
+        "concurrency": rows,
+        # headline: the §4.2 composition win at the highest concurrency
+        "speedup": rows[str(max(args.concurrency))]["speedup"],
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} (hierarchical speedup over SpecReason-only "
+          f"{out['speedup']:.2f}x at c={max(args.concurrency)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,17 @@
 """End-to-end serving driver (the paper's kind of workload): batch of
 reasoning requests served with SpecReason on the TRAINED testbed pair,
-comparing all five schemes from the paper's Fig 3.
+comparing all five schemes from the paper's Fig 3 — then the same
+workload through the continuous-batching scheduler with *hierarchical
+speculation* on (``--spec-decode --gamma 4``, SpecReason+Decode §4.2),
+printing the per-request acceptance-rate breakdown
+(``spec[acc=.. len=../..r]``) alongside the usual meter output.
 
-Decoding runs through the engines' fused on-device loop and the per-engine
-meter breakdown is printed per request (add ``--decode-loop eager`` to see
-how much of the latency the fused loop removes).
+Decoding runs through the engines' fused on-device loop and the
+per-engine meter breakdown is printed per request (add ``--decode-loop
+eager`` to see how much of the latency the fused loop removes).
 
   PYTHONPATH=src python examples/serve_specreason.py -n 6
+  PYTHONPATH=src python examples/serve_specreason.py -n 8 --gamma 6
 """
 
 import sys
@@ -15,8 +20,31 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
-    if "--scheme" not in argv:
-        argv = ["--scheme", "all", *argv]
-    if "--meters" not in argv:
-        argv = ["--meters", *argv]
-    main(argv)
+    gamma = "4"
+    if "--gamma" in argv:
+        i = argv.index("--gamma")
+        if i + 1 >= len(argv):
+            sys.exit("serve_specreason: --gamma requires a value")
+        gamma = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+
+    # 1) the paper's five schemes, sequentially, with meter breakdowns
+    seq_argv = list(argv)
+    if "--scheme" not in seq_argv:
+        seq_argv = ["--scheme", "all", *seq_argv]
+    if "--meters" not in seq_argv:
+        seq_argv = ["--meters", *seq_argv]
+    main(seq_argv)
+
+    # 2) the same workload, continuously batched WITH hierarchical
+    # speculation: batched token-level spec decode under SpecReason
+    print(f"\n--- hierarchical speculation (continuous scheduler, "
+          f"--spec-decode --gamma {gamma}) ---")
+    hier_argv = list(argv)
+    for flag in ("--scheme", "--scheduler"):   # the demo pins both
+        if flag in hier_argv:
+            i = hier_argv.index(flag)
+            hier_argv = hier_argv[:i] + hier_argv[i + 2:]
+    hier_argv = [a for a in hier_argv if a != "--meters"]
+    main(["--scheduler", "continuous", "--spec-decode", "--gamma", gamma,
+          "--meters", *hier_argv])

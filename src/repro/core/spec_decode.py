@@ -6,28 +6,34 @@ them with ONE chunked-prefill pass (gamma+1 usable distributions thanks to
 the Session's cached last_logits).  Greedy mode accepts the longest
 argmax-matching prefix; sampled mode runs the standard rejection-sampling
 rule, preserving the base model's output distribution exactly (property-
-tested in tests/test_spec_decode.py).
+tested in tests/test_spec_decode.py and tests/test_spec_engine.py).
 
-Both engines' contexts are kept in sync via snapshot/replay rollback, so
-the routine works for any model family (attention, SSM, hybrid).
+Single source of truth: the accept/resample/bonus rule lives in ONE fused
+batched program, :func:`acceptance_step` — a jitted ``vmap`` over rows
+whose per-row scan replicates the classic host loop's PRNG split order
+exactly.  The sequential :func:`spec_decode` routine here is a thin
+wrapper that calls it with batch 1; the serving-side batched path
+(``serving.spec_engine.BatchSpecEngine``) calls it with every in-flight
+row at once.  Because both drivers execute the *same* program, batched
+spec decode is bit-identical per row to this sequential routine (tested).
 
-With the engine's fused decode loop (the default) the draft model's
-gamma-token proposal — sampling, stop/budget bookkeeping and the proposal
-distributions needed by the rejection rule — runs as a single on-device
-program with one host sync (see DESIGN.md §Fused decode loop)."""
+Both engines' contexts are kept in sync via snapshot + O(1) truncate
+rollback (attention) or snapshot/replay (SSM/hybrid), so the routine
+works for any model family.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sampling.sample import (SamplingParams, adjust_logits,
-                               probs_from_logits, sample, sample_from_probs)
-from ..serving.engine import Engine, Session
+from ..sampling.sample import SamplingParams, probs_from_logits
+from ..serving.engine import _STOP_SLOTS, Engine, Session
 
 
 @dataclasses.dataclass
@@ -40,9 +46,159 @@ class SpecDecodeStats:
     def acceptance_rate(self) -> float:
         return self.accepted / max(self.proposed, 1)
 
+    @property
+    def mean_accepted_len(self) -> float:
+        """Mean accepted draft tokens per verification round (excludes the
+        replacement/bonus token, which is never speculative)."""
+        return self.accepted / max(self.rounds, 1)
 
-def _base_probs(logits: jax.Array, params: SamplingParams) -> np.ndarray:
-    return np.asarray(probs_from_logits(logits, params), np.float32)
+    def merge(self, other: "SpecDecodeStats") -> None:
+        self.proposed += other.proposed
+        self.accepted += other.accepted
+        self.rounds += other.rounds
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"proposed": self.proposed, "accepted": self.accepted,
+                "rounds": self.rounds,
+                "acceptance_rate": round(self.acceptance_rate, 4),
+                "mean_accepted_len": round(self.mean_accepted_len, 4)}
+
+
+def build_stop_arrays(stop_sets: Sequence[Sequence[int]]
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row stop sets -> (stop_arr (S,), stop_mask (B, S)) padded to a
+    multiple of the engine's stop-slot quantum so the fused acceptance
+    program compiles once per quantum, not per stop-set size."""
+    stop = sorted(set(int(s) for row in stop_sets for s in row))
+    n_slots = max(_STOP_SLOTS, -(-len(stop) // _STOP_SLOTS) * _STOP_SLOTS)
+    stop_arr = np.asarray(stop + [-1] * (n_slots - len(stop)), np.int32)
+    mask = np.zeros((len(stop_sets), n_slots), bool)
+    for i, row in enumerate(stop_sets):
+        allowed = set(int(s) for s in row)
+        mask[i, :len(stop)] = [s in allowed for s in stop]
+    return stop_arr, mask
+
+
+# ---------------------------------------------------------------------------
+# The fused batched acceptance / rejection-sampling program
+# ---------------------------------------------------------------------------
+
+
+def _accept_row(toks, qprobs, logits, bonus_logit, g, key, stop_arr,
+                stop_mask, greedy, *, sp: SamplingParams):
+    """One row of the acceptance program (vmapped by acceptance_step).
+
+    Greedy rows (``sp.temperature <= 0``) accept the longest argmax-
+    matching prefix and consume NO PRNG splits for the checks or the
+    replacement — only the bonus draw splits (and discards), mirroring
+    the classic host loop.  Sampled rows split once per examined token
+    (the standard rejection rule) and once for the replacement-or-bonus
+    draw; the two are mutually exclusive, so it is ONE split either way.
+    The per-row ``greedy`` flag forces argmax *decisions* under a sampled
+    ``sp`` (split order stays the sampled one, matching the batch
+    engine's per-row greedy override)."""
+    big = toks.shape[0]
+    greedy_static = sp.temperature <= 0.0
+    # the post-draft chain advance (key, _ = split(key)): folded in here
+    # so a round costs one fewer dispatch — the caller passes the SAME
+    # key the draft proposal consumed
+    key = jax.random.split(key)[0]
+
+    def is_stop(tok):
+        return jnp.any((tok == stop_arr) & stop_mask)
+
+    def step(carry, i):
+        key, accepting, n_acc, stopped = carry
+        examine = accepting & (i < g)
+        tok = toks[i]
+        ok_greedy = jnp.argmax(logits[i]) == tok
+        if greedy_static:
+            ok = ok_greedy
+            key_next = key
+        else:
+            split = jax.random.split(key)
+            p = probs_from_logits(logits[i], sp)[tok]
+            q = qprobs[i, tok]
+            u = jax.random.uniform(split[1])
+            ok_sampled = u < jnp.minimum(1.0, p / jnp.maximum(q, 1e-30))
+            ok = jnp.where(greedy, ok_greedy, ok_sampled)
+            key_next = jnp.where(examine, split[0], key)
+        acc = examine & ok
+        hit = acc & is_stop(tok)
+        return (key_next, examine & ok & ~hit,
+                n_acc + acc.astype(jnp.int32), stopped | hit), None
+
+    (key, _, n_acc, stopped), _ = jax.lax.scan(
+        step, (key, g > 0, jnp.asarray(0, jnp.int32),
+               jnp.asarray(False)), jnp.arange(big))
+
+    rejected = ~stopped & (n_acc < g)
+    has_extra = ~stopped & (g > 0)
+    r = jnp.minimum(n_acc, big - 1)          # first rejected position
+
+    # replacement (residual distribution) and bonus draws share one split:
+    # they are mutually exclusive continuations of the round
+    extra_greedy = jnp.where(rejected, jnp.argmax(logits[r]),
+                             jnp.argmax(bonus_logit)).astype(jnp.int32)
+    if greedy_static:
+        key = jnp.where(has_extra & ~rejected, jax.random.split(key)[0],
+                        key)                 # bonus splits (and discards)
+        extra = extra_greedy
+    else:
+        split = jax.random.split(key)
+        key = jnp.where(has_extra, split[0], key)
+        p_row = probs_from_logits(logits[r], sp)
+        resid = jnp.maximum(p_row - qprobs[r], 0.0)
+        z = jnp.sum(resid)
+        dist = jnp.where(z > 1e-12, resid / jnp.where(z > 0, z, 1.0),
+                         p_row / jnp.sum(p_row))
+        p_bonus = probs_from_logits(bonus_logit, sp)
+        draw_from = jnp.where(rejected, dist, p_bonus)
+        extra_sampled = jax.random.categorical(
+            split[1], jnp.log(jnp.maximum(draw_from, 1e-30))).astype(
+                jnp.int32)
+        extra = jnp.where(greedy, extra_greedy, extra_sampled)
+
+    m = n_acc + has_extra.astype(jnp.int32)
+    hit_stop = stopped | (has_extra & is_stop(extra))
+    idx = jnp.arange(big + 1)
+    toks_pad = jnp.concatenate([toks, jnp.full((1,), -1, jnp.int32)])
+    suffix = jnp.where(idx < n_acc, toks_pad[jnp.minimum(idx, big - 1)], -1)
+    suffix = jnp.where((idx == n_acc) & has_extra, extra, suffix)
+    return suffix, m, n_acc, hit_stop, key
+
+
+@functools.partial(jax.jit, static_argnames=("sp",))
+def acceptance_step(draft_toks: jax.Array, draft_probs: jax.Array,
+                    all_logits: jax.Array, bonus_logits: jax.Array,
+                    g: jax.Array, keys: jax.Array, stop_arr: jax.Array,
+                    stop_mask: jax.Array, greedy: jax.Array,
+                    sp: SamplingParams):
+    """ONE fused batched rejection-sampling/acceptance program.
+
+    draft_toks: (B, G) proposed tokens (pad past each row's ``g``);
+    draft_probs: (B, G, V) the draft's post-adjustment proposal
+    distributions; all_logits: (B, G, V) base logits predicting draft
+    token i (row 0 = the pre-chunk last_logits); bonus_logits: (B, V)
+    base logits after the full chunk; g: (B,) proposed count per row;
+    keys: (B, 2) per-row PRNG keys — the SAME keys the draft proposal
+    consumed (the program performs the post-draft chain advance
+    internally); stop_arr /
+    stop_mask: from :func:`build_stop_arrays`; greedy: (B,) per-row
+    argmax override.
+
+    Returns (suffix (B, G+1) int32 padded with -1, m (B,) emitted count,
+    n_acc (B,) accepted count, hit_stop (B,) bool, new_keys (B, 2)).
+    Rows with g == 0 emit nothing and leave their key untouched."""
+    row = functools.partial(_accept_row, sp=sp)
+    return jax.vmap(row, in_axes=(0, 0, 0, 0, 0, 0, None, 0, 0))(
+        draft_toks, draft_probs, all_logits, bonus_logits, g, keys,
+        stop_arr, stop_mask, greedy)
+
+
+# ---------------------------------------------------------------------------
+# Sequential routine (thin wrapper over the shared program)
+# ---------------------------------------------------------------------------
 
 
 def spec_decode(base: Engine, draft: Engine, base_sess: Session,
@@ -61,11 +217,21 @@ def spec_decode(base: Engine, draft: Engine, base_sess: Session,
     ``fused`` selects the draft model's decode loop (None = the draft
     engine's default): with the fused path the whole gamma-token proposal,
     including its per-token proposal distributions, is ONE device call —
-    so a round costs one draft dispatch + one base verification prefill
-    instead of 3*gamma host round-trips."""
-    stop = set(int(s) for s in stop_ids)
+    so a round costs one draft dispatch + one base verification prefill +
+    one acceptance program instead of 3*gamma host round-trips.
+
+    Deferred-feed layout: each round's final suffix token stays *pending*
+    — its base-model logits come out of the NEXT round's verification
+    prefill (the chunk is ``[pending] + draft_ids``, so the pending
+    token's decode rides the prefill for free), and only when the
+    routine finishes does one base decode commit the last pending token
+    and refresh last_logits.  The draft context is reconciled eagerly
+    every round (the next proposal conditions on it)."""
     out: List[int] = []
     stats = stats if stats is not None else SpecDecodeStats()
+    stop_arr, stop_mask = build_stop_arrays([stop_ids])
+    vocab = base.model.cfg.vocab_size
+    pending: Optional[int] = None
 
     while len(out) < max_tokens:
         g = min(gamma, max_tokens - len(out))
@@ -74,86 +240,75 @@ def spec_decode(base: Engine, draft: Engine, base_sess: Session,
         draft_ids, draft_sess, draft_probs = draft.generate(
             draft_sess, g, stop_ids=(), params=params, key=key,
             collect_probs=True, fused=fused)
-        key, _ = jax.random.split(key)
+        # NB: no host-side key advance here — acceptance_step performs
+        # the post-draft split internally (one fewer dispatch per round)
+        if not draft_ids:        # capacity exhausted mid-spec: stop clean
+            break
         stats.proposed += len(draft_ids)
         stats.rounds += 1
+        base.meter.spec_rounds += 1
+        base.meter.spec_proposed += len(draft_ids)
 
-        # 2) base verifies the whole chunk in one prefill
+        # 2) base verifies pending + chunk in ONE prefill; distributions:
+        # with a pending token, chunk_logits[i] (the logits after
+        # [pending, d_1..d_i]) predicts d_{i+1} — the pending token's
+        # feed rides the verification prefill; on the first round
+        # last_logits covers d_1 as before
         b_snap = base_sess.snapshot()
-        chunk_logits, base_sess_ext = base.extend_logits(base_sess, draft_ids)
-        # distributions: p(d1|ctx) from last_logits, p(d_{i+1}|ctx+d<=i)
-        all_logits = jnp.concatenate([b_snap.last_logits, chunk_logits[:-1]],
-                                     axis=0)
-
-        accepted: List[int] = []
-        replacement: Optional[int] = None
-        for i, tok in enumerate(draft_ids):
-            p_base = _base_probs(all_logits[i], params)
-            if params.temperature <= 0:
-                ok = int(np.argmax(p_base)) == tok
-            else:
-                q = float(draft_probs[i][tok])
-                p = float(p_base[tok])
-                key, sub = jax.random.split(key)
-                ok = float(jax.random.uniform(sub)) < min(1.0, p / max(q,
-                                                                       1e-30))
-            if ok:
-                accepted.append(tok)
-                stats.accepted += 1
-                if tok in stop:
-                    break
-            else:
-                # residual distribution (p - q)_+ normalized
-                if params.temperature <= 0:
-                    replacement = int(np.argmax(p_base))
-                else:
-                    resid = np.maximum(p_base - draft_probs[i], 0.0)
-                    z = resid.sum()
-                    if z <= 1e-12:
-                        resid = p_base
-                        z = resid.sum()
-                    key, sub = jax.random.split(key)
-                    replacement = int(sample_from_probs(
-                        jnp.asarray(resid / z), sub))
-                break
-
-        hit_stop = bool(accepted) and accepted[-1] in stop
-        if len(accepted) == len(draft_ids) and replacement is None \
-                and not hit_stop:
-            # all accepted: bonus token from the base distribution at the end
-            p_bonus = _base_probs(chunk_logits[-1], params)
-            key, sub = jax.random.split(key)
-            replacement = (int(np.argmax(p_bonus))
-                           if params.temperature <= 0
-                           else int(sample_from_probs(jnp.asarray(p_bonus),
-                                                      sub)))
-
-        # 3) reconcile both contexts to: snapshot + accepted (+ replacement)
-        suffix = accepted + ([replacement] if replacement is not None
-                             and not hit_stop else [])
-        out += suffix
-        if replacement is not None and not hit_stop and replacement in stop:
-            hit_stop = True
-
-        if len(accepted) == len(draft_ids) and not hit_stop:
-            # base context already contains the chunk; append replacement
-            base_sess = base.extend(base_sess_ext, [replacement])
-            draft_sess = draft.extend(draft_sess, [replacement])
+        p = 1 if pending is not None else 0
+        chunk = ([pending] if p else []) + list(draft_ids)
+        chunk_logits, base_sess_ext = base.extend_logits(base_sess, chunk)
+        n = len(draft_ids)
+        toks = np.zeros((1, gamma), np.int32)
+        toks[0, :n] = draft_ids
+        probs = np.zeros((1, gamma, vocab), np.float32)
+        probs[0, :n] = np.stack(draft_probs)
+        logits = np.zeros((1, gamma, vocab), np.float32)
+        if p:
+            logits[0, :n] = np.asarray(chunk_logits[:n], np.float32)
         else:
-            # Reject path.  Both caches already hold ``draft_ids`` at the
-            # speculated positions and ``suffix[:-1]`` is a prefix of them,
-            # so attention-cache engines roll back in O(1): truncate to
-            # len(suffix)-1 kept tokens and re-decode ONLY the final suffix
-            # token (which also refreshes last_logits).  No accepted token
-            # is ever recomputed — this is what makes speculation
-            # profitable at wall-clock level (§Perf testbed iteration s1).
-            # SSM engines fall back to snapshot + replay.
-            assert suffix, "reject path always has >= 1 reconcile token"
-            base_sess = _reconcile(base, base_sess_ext, b_snap, suffix)
-            draft_sess = _reconcile(draft, draft_sess, d_snap, suffix)
+            logits[0, 0] = np.asarray(b_snap.last_logits[0], np.float32)
+            if n > 1:
+                logits[0, 1:n] = np.asarray(chunk_logits[:n - 1],
+                                            np.float32)
 
-        if hit_stop:
+        # 3) the shared fused acceptance program, batch of 1
+        suffix_p, m, n_acc, hit_stop, new_key = acceptance_step(
+            jnp.asarray(toks), jnp.asarray(probs), jnp.asarray(logits),
+            jnp.asarray(chunk_logits[p + n - 1], jnp.float32)[None],
+            jnp.asarray([n], jnp.int32), key[None], jnp.asarray(stop_arr),
+            jnp.asarray(stop_mask), jnp.zeros((1,), bool), params)
+        m0 = int(m[0])
+        suffix = [int(t) for t in np.asarray(suffix_p)[0, :m0]]
+        key = new_key[0]
+        stats.accepted += int(n_acc[0])
+        base.meter.spec_accepted += int(n_acc[0])
+        out += suffix
+
+        # 4) reconcile.  The base cache holds [pending] + draft_ids at
+        # the speculated positions and suffix[:-1] is a prefix of
+        # draft_ids, so rollback is an O(1) truncate keeping
+        # p + len(suffix) - 1 tokens; the new final suffix token becomes
+        # the next round's pending (no decode here).  The draft cache
+        # reconciles eagerly: truncate + re-decode ONLY the final suffix
+        # token.  No accepted token is ever recomputed.  SSM engines
+        # fall back to snapshot + replay.
+        assert suffix, "a round always emits >= 1 token"
+        if base.can_truncate:
+            base_sess = base.truncate(base_sess_ext,
+                                      b_snap.pos + p + m0 - 1,
+                                      b_snap.last_logits)  # stale; unread
+        else:
+            base_sess = base.rollback(base_sess_ext, b_snap,
+                                      replay=chunk[:p + m0 - 1])
+        pending = suffix[-1]
+        draft_sess = _reconcile(draft, draft_sess, d_snap, suffix)
+
+        if bool(hit_stop[0]):
             break
+    if pending is not None:
+        # commit the last pending token and refresh last_logits
+        base_sess = base.decode_one(base_sess, pending)
     return out, base_sess, draft_sess
 
 

@@ -1,8 +1,14 @@
 """Pallas TPU kernels for the compute hot-spots SpecReason serving hits:
 
-flash_attention   causal GQA prefill/verification attention
-decode_attention  flash-decode (one token vs long KV cache)
-ssd_scan          Mamba2 SSD chunked scan (fused inter-chunk recurrence)
+flash_attention         causal GQA prefill/verification attention
+decode_attention        flash-decode (one token vs long KV cache)
+paged_decode_attention  flash-decode over a block-pool KV cache (scalar-
+                        prefetched block tables; continuous batching)
+paged_append_attention  spec-verification span attention: gamma+1 queries
+                        over paged context + in-flight draft K/V (causal
+                        in the appended span; hierarchical speculation)
+ssd_scan                Mamba2 SSD chunked scan (fused inter-chunk
+                        recurrence)
 
 ops.py holds the jit'd wrappers (interpret-mode on CPU); ref.py the
 pure-jnp oracles the tests sweep against.

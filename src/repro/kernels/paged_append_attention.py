@@ -1,0 +1,185 @@
+"""Paged append-attention — the Pallas TPU kernel behind batched
+token-level speculative *verification* over a block-pool KV cache
+(serving/spec_engine.py).
+
+One spec-decode round appends a gamma-token draft chunk to every row and
+needs the base model's logits at each appended position: gamma+1 usable
+distributions from ONE pass (the cached last-token logits plus the chunk's
+own).  That verification forward is a *span* attention: T = gamma (+1 for
+the bonus position) query tokens per row attend over
+
+  * the row's committed context — physical pages of the global pool
+    ``(P, K, block_size, hd)`` addressed through a *scalar-prefetched*
+    block table, exactly like ``paged_decode_attention``; and
+  * the in-flight draft tokens themselves — a dense ``(B, T, K, hd)``
+    side buffer holding the chunk's fresh K/V, attended *causally within
+    the appended span* (query i sees draft tokens 0..i).  The draft K/V
+    never touch the page pool: a rejected suffix is rolled back by
+    per-row block-table truncation, no copy, no orphaned page writes.
+
+Grid and scratch scheme:
+  * grid = (batch, kv_heads, nb + 1): the kv-page loop is innermost and
+    sequential so the online-softmax accumulator — (T*G, hd) VMEM scratch,
+    all G = H/K query heads of all T span positions as ONE skinny MXU
+    tile — survives across a row's pages;
+  * steps 0..nb-1 stream the row's committed pages (table entries past
+    ``ctx_len`` are 0 — a valid page whose DMA lands but whose compute is
+    predicated off; the partial tail page is masked per-slot);
+  * step nb attends the appended span with the in-span causal mask
+    (kj <= qi, kj < span_len) and emits the normalized output.
+
+Rows are ragged twice over: per-row context length AND per-row span
+length (the last round's chunk may be shorter than gamma).  Both arrive
+via scalar prefetch; pad queries produce garbage the caller slices off.
+
+Validated in interpret mode against ``ref.paged_append_reference`` (a
+gather-then-dense oracle) and, through ``PagedKVStore``, against the
+dense prefill path (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_append_kernel(ctx_lens_ref, span_lens_ref, tables_ref, q_ref,
+                         kn_ref, vn_ref, k_ref, v_ref, o_ref, acc_ref,
+                         m_ref, l_ref, *, block_size: int, span: int,
+                         group: int, scale: float):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)          # nb page steps + 1 span step
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ctx_len = ctx_lens_ref[ib]
+    span_len = span_lens_ref[ib]
+    # q: (T, G, hd) -> one (T*G, hd) MXU tile; row r of the tile is query
+    # position r // G (the in-span causal index)
+    q = q_ref[0, 0].astype(jnp.float32).reshape(span * group, -1)
+
+    def _online_update(s, v):
+        """One online-softmax step over already-masked scores ``s``
+        ((T*G, S) vs values ``v`` (S, hd))."""
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(jnp.logical_and(ik < nk - 1, ik * block_size < ctx_len))
+    def _pages():
+        # committed-context page: every span query sees every valid slot
+        k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = ik * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape,
+                                                        1)
+        s = jnp.where(kj < ctx_len, s, NEG_INF)
+        _online_update(s, v)
+
+    @pl.when(ik == nk - 1)
+    def _span_and_emit():
+        # the in-flight draft tokens: causal within the appended span
+        kn = kn_ref[0, 0].astype(jnp.float32)          # (T, hd)
+        vn = vn_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kn, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        kj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((kj <= qi) & (kj < span_len), s, NEG_INF)
+        _online_update(s, vn)
+
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).reshape(
+            span, group, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_append_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           block_tables: jax.Array, ctx_lens: jax.Array,
+                           span_lens: jax.Array,
+                           interpret: bool = False) -> jax.Array:
+    """Span attention for batched speculative verification.
+
+    q: (B, T, H, hd) — the appended span's queries (T = padded gamma
+    span); k_new/v_new: (B, T, K, hd) — the span's fresh K/V (NOT in the
+    page pool); k_pages/v_pages: (P, K, block_size, hd) — the global page
+    pool; block_tables: (B, nb) int32 page ids per row (pad with 0);
+    ctx_lens: (B,) committed tokens per row; span_lens: (B,) valid span
+    tokens per row.  Returns (B, T, H, hd); rows' outputs past their
+    span_len are garbage (the caller slices)."""
+    b, t, h, hd = q.shape
+    p_, kh, block_size, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    assert h % kh == 0
+    assert k_new.shape == (b, t, kh, hd)
+    group = h // kh
+    scale = 1.0 / math.sqrt(hd)
+
+    # (B, T, H, hd) -> (B, K, T, G, hd): per (row, kv-head) grid step the
+    # kernel sees its T*G query rows as one tile
+    qg = q.reshape(b, t, kh, group, hd).transpose(0, 2, 1, 3, 4)
+    kn = k_new.transpose(0, 2, 1, 3)               # (B, K, T, hd)
+    vn = v_new.transpose(0, 2, 1, 3)
+    grid = (b, kh, nb + 1)
+    kernel = functools.partial(_paged_append_kernel, block_size=block_size,
+                               span=t, group=group, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, t, group, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, 0, 0, 0)),
+                pl.BlockSpec((1, 1, t, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+                pl.BlockSpec((1, 1, t, hd),
+                             lambda ib, ih, ik, *_: (ib, ih, 0, 0)),
+                # the page gather: block index = the prefetched table
+                # entry (clamped to the span step's repeat of the last
+                # page — its compute is predicated off)
+                pl.BlockSpec((1, 1, block_size, hd),
+                             lambda ib, ih, ik, cl, sl, tbl:
+                             (tbl[ib, jnp.minimum(ik, tbl.shape[1] - 1)],
+                              ih, 0, 0)),
+                pl.BlockSpec((1, 1, block_size, hd),
+                             lambda ib, ih, ik, cl, sl, tbl:
+                             (tbl[ib, jnp.minimum(ik, tbl.shape[1] - 1)],
+                              ih, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, t, group, hd),
+                                   lambda ib, ih, ik, *_: (ib, ih, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((t * group, hd), jnp.float32),
+                pltpu.VMEM((t * group,), jnp.float32),
+                pltpu.VMEM((t * group,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kh, t, group, hd), q.dtype),
+        interpret=interpret,
+    )(ctx_lens.astype(jnp.int32), span_lens.astype(jnp.int32),
+      block_tables.astype(jnp.int32), qg, kn, vn, k_pages, v_pages)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, t, h, hd)

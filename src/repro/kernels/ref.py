@@ -74,6 +74,50 @@ def paged_decode_reference(q: jax.Array, k_pages: jax.Array,
     return decode_reference(q, k, v, lengths)
 
 
+def paged_append_reference(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           block_tables: jax.Array, ctx_lens: jax.Array,
+                           span_lens: jax.Array) -> jax.Array:
+    """Append-attention oracle: gather each row's pages into a dense
+    cache, concatenate the in-flight span, run masked softmax attention.
+
+    q: (B, T, H, hd) span queries; k_new/v_new: (B, T, K, hd) the span's
+    fresh K/V; k_pages/v_pages: (P, K, bs, hd); block_tables: (B, nb);
+    ctx_lens/span_lens: (B,).  Query i of a row sees context slots
+    < ctx_len plus span slots j <= i with j < span_len.  Outputs past a
+    row's span_len are zeroed (the kernel leaves them as garbage)."""
+    bsz, t, h, hd = q.shape
+    _, kh, bs, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    group = h // kh
+    # (B, nb, K, bs, hd) -> (B, K, nb*bs, hd) dense committed context
+    kc = k_pages[block_tables].transpose(0, 2, 1, 3, 4).reshape(
+        bsz, kh, nb * bs, hd)
+    vc = v_pages[block_tables].transpose(0, 2, 1, 3, 4).reshape(
+        bsz, kh, nb * bs, hd)
+    k = jnp.concatenate([kc, k_new.transpose(0, 2, 1, 3)], axis=2)
+    v = jnp.concatenate([vc, v_new.transpose(0, 2, 1, 3)], axis=2)
+    k = _repeat_kv_heads(k, group)
+    v = _repeat_kv_heads(v, group)
+    qh = q.transpose(0, 2, 1, 3)                       # (B, H, T, hd)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    s_ctx = nb * bs
+    kj = jnp.arange(s_ctx + t)[None, None, None, :]
+    qi = jnp.arange(t)[None, None, :, None]
+    in_ctx = (kj < s_ctx) & (kj < ctx_lens[:, None, None, None])
+    in_span = (kj >= s_ctx) & (kj - s_ctx <= qi) \
+        & (kj - s_ctx < span_lens[:, None, None, None])
+    scores = jnp.where(in_ctx | in_span, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs,
+                     v.astype(jnp.float32)).astype(q.dtype)
+    out = out.transpose(0, 2, 1, 3)                    # (B, T, H, hd)
+    valid = jnp.arange(t)[None, :, None, None] < \
+        span_lens[:, None, None, None]
+    return jnp.where(valid, out, 0.0)
+
+
 def ssd_reference(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                   c: jax.Array, init_state: jax.Array):
     """Sequential (non-chunked) SSD recurrence — the definitional form.

@@ -14,11 +14,22 @@ regenerating requests into one base-model call (``--batch`` concurrent
 rows, paged-KV admission control).  ``--arrival-rate`` simulates Poisson
 arrivals (req/s; 0 = all at t=0).
 
+``--spec-decode`` turns on *hierarchical speculation* on the continuous
+scheduler (SpecReason+Decode, §4.2): every fallback regeneration and
+final answer decodes through batched token-level speculative decoding —
+one fused gamma-token draft proposal, one base verification prefill and
+one fused acceptance program per round across all in-flight rows, with
+rejected suffixes rolled back by paged block-table truncation.  Outputs
+stay token-identical to spec-off greedy serving; per-request acceptance
+rate and mean accepted length are reported alongside the meters.
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
   PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \\
       --batch 8 -n 16 --arrival-rate 2
+  PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \\
+      --spec-decode --gamma 4 --batch 8 -n 16
 """
 
 from __future__ import annotations
@@ -65,9 +76,22 @@ def run_scheme(scheme: str, base, small, task, key, budget: int,
 def _meter_line(name: str, m: dict) -> str:
     dt, dc = m.get("decode_tokens", 0), m.get("decode_calls", 0)
     tok_s = dt / m["decode_time"] if m.get("decode_time") else 0.0
-    return (f"    {name}: decode {dt} tok / {dc} calls "
+    line = (f"    {name}: decode {dt} tok / {dc} calls "
             f"({tok_s:.0f} tok/s), prefill {m.get('prefill_tokens', 0)} tok "
             f"/ {m.get('prefill_calls', 0)} calls")
+    if m.get("spec_rounds"):
+        line += (f", spec {m['spec_accepted']}/{m['spec_proposed']} "
+                 f"accepted over {m['spec_rounds']} rounds")
+    return line
+
+
+def _spec_suffix(res) -> str:
+    """Per-request acceptance breakdown for hierarchical runs."""
+    s = res.spec_stats
+    if not s.rounds:
+        return ""
+    return (f" spec[acc={s.acceptance_rate:.2f} "
+            f"len={s.mean_accepted_len:.1f}/{s.rounds}r]")
 
 
 def serve_continuous(args, base, small, reqs, fused: bool) -> None:
@@ -78,6 +102,8 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                            token_budget=args.budget,
                            sampling=SamplingParams(
                                temperature=args.temperature),
+                           use_spec_decode=args.spec_decode,
+                           spec_gamma=args.gamma,
                            fused_decode=fused)
     ctrl = SpecReason(base, small, cfg)
     kv = KVManager(base.model.cfg, small.model.cfg,
@@ -92,15 +118,20 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
     t0 = time.perf_counter()
     handles = run_workload(sched, pairs, arrivals)
     wall = time.perf_counter() - t0
+    tag = "hierspec" if args.spec_decode else "continuous"
     for i, h in enumerate(handles):
         res = h.result
         ok = is_correct(h.task, res.answer_ids)
-        print(f"[continuous] req{i}: {'OK ' if ok else 'BAD'} "
-              f"lat={h.e2e_latency:.2f}s think={res.n_thinking_tokens} "
-              f"answer={tk.detok(res.answer_ids)}")
+        print(f"[{tag}] req{i}: {'OK ' if ok else 'BAD'} "
+              f"lat={h.e2e_latency:.2f}s think={res.n_thinking_tokens}"
+              f"{_spec_suffix(res)} answer={tk.detok(res.answer_ids)}")
+        if args.meters:
+            for name, m in res.meters.items():
+                print(_meter_line(name, m))
     stats = summarize(handles, wall)
     stats.update({
         "scheduler": "continuous", "batch": args.batch,
+        "spec_decode": args.spec_decode, "gamma": args.gamma,
         "arrival_rate": args.arrival_rate, "ticks": sched.ticks,
         "preemptions": sched.preemptions,
         "accuracy": sum(is_correct(h.task, h.result.answer_ids)
@@ -138,10 +169,21 @@ def main(argv=None):
     ap.add_argument("--kv-budget-mb", type=int, default=64,
                     help="continuous scheduler: HBM budget for the static "
                          "base/small KV partition")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="continuous scheduler: hierarchical speculation "
+                         "— batched token-level spec decode for fallback "
+                         "regenerations and final answers (§4.2)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="spec decode: draft tokens proposed per "
+                         "verification round")
     args = ap.parse_args(argv)
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "
                  "only; drop --scheme or use the sequential scheduler")
+    if args.spec_decode and args.scheduler != "continuous":
+        ap.error("--spec-decode rides on the continuous scheduler; add "
+                 "--scheduler continuous (the sequential regime's "
+                 "specreason+decode scheme covers the one-at-a-time case)")
 
     fused = args.decode_loop == "fused"
     base, small = load_testbed_engines(args.ckpt_dir)
@@ -165,7 +207,8 @@ def main(argv=None):
             acc.append(ok)
             toks.append(res.n_thinking_tokens)
             print(f"[{scheme}] req{i}: {'OK ' if ok else 'BAD'} "
-                  f"{res.wall_time:.2f}s think={res.n_thinking_tokens} "
+                  f"{res.wall_time:.2f}s think={res.n_thinking_tokens}"
+                  f"{_spec_suffix(res)} "
                   f"answer={tk.detok(res.answer_ids)}")
             if args.meters:
                 for name, m in res.meters.items():

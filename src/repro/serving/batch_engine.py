@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
-from ..sampling.sample import SamplingParams, sample
+from ..sampling.sample import SamplingParams, probs_from_logits, sample
 from .engine import DEFAULT_BUCKETS, Meter, _STOP_SLOTS
 
 
@@ -82,8 +82,9 @@ class BatchEngine:
         self._free = list(range(batch - 1, -1, -1))
         self._live = [False] * batch
         self._prefill_cache: Dict[int, Callable] = {}
-        self._fused_cache: Dict[Tuple[int, int, SamplingParams],
+        self._fused_cache: Dict[Tuple[int, int, SamplingParams, bool],
                                 Callable] = {}
+        self._feed_cache: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------- rows
     def alloc_row(self) -> Optional[int]:
@@ -115,6 +116,16 @@ class BatchEngine:
         assert snap.pos <= self.pos[row]
         self.pos[row] = snap.pos
         self.last_logits[row] = snap.last_logits
+
+    def truncate_row(self, row: int, pos: int) -> None:
+        """O(1) position-only truncate (the spec-decode rollback): keep
+        the row's cache, drop its logical length to ``pos``.  The row's
+        last_logits become stale — the caller must refresh them (a feed
+        or an extend) before anything samples from them."""
+        assert self._live[row], f"truncate of dead row {row}"
+        assert 0 <= pos <= self.pos[row], \
+            f"row {row}: truncate to {pos} above position {self.pos[row]}"
+        self.pos[row] = pos
 
     # ---------------------------------------------------------- helpers
     def _bucket(self, n: int) -> int:
@@ -229,14 +240,17 @@ class BatchEngine:
             b *= 2
         return min(b, self.capacity)
 
-    def _fused_decode_fn(self, buf: int, cap_eff: int, sp: SamplingParams
-                         ) -> Callable:
+    def _fused_decode_fn(self, buf: int, cap_eff: int, sp: SamplingParams,
+                         collect_probs: bool = False) -> Callable:
         """The fused multi-sequence decode step: one ``jax.lax.while_loop``
         advances every active row — per-row sample, per-row stop/budget
         flags, per-row key splits — with a single dispatch and a single
         host sync for the whole batched step.  The loop runs on a
-        ``cap_eff``-slot slice of the KV cache (merged back afterwards)."""
-        cache_key = (buf, cap_eff, sp)
+        ``cap_eff``-slot slice of the KV cache (merged back afterwards).
+        With ``collect_probs`` the per-step post-adjustment sampling
+        distributions land in a (B, buf, V) buffer — the proposal
+        distributions batched speculative decoding verifies against."""
+        cache_key = (buf, cap_eff, sp, collect_probs)
         fn = self._fused_cache.get(cache_key)
         if fn is not None:
             return fn
@@ -253,6 +267,10 @@ class BatchEngine:
                 v=None if full_state.v is None else
                 full_state.v[:, :, :cap_eff])
             toks0 = jnp.full((batch, buf), -1, jnp.int32)
+            vocab = last_logits.shape[-1]
+            probs0 = (jnp.zeros((batch, buf, vocab), jnp.float32)
+                      if collect_probs
+                      else jnp.zeros((batch, 0, 0), jnp.float32))
             active0 = n_max > 0
             n0 = jnp.zeros((batch,), jnp.int32)
 
@@ -261,7 +279,7 @@ class BatchEngine:
                 return jnp.logical_and(i < jnp.max(n_max), jnp.any(active))
 
             def body(carry):
-                i, active, n, state, logits, keys, toks = carry
+                i, active, n, state, logits, keys, toks, probs = carry
                 split = jax.vmap(jax.random.split)(keys)   # (B, 2, 2)
                 keys_new, subs = split[:, 0], split[:, 1]
                 tok_sp = jax.vmap(lambda l, k: sample(l, sp, k))(logits,
@@ -270,6 +288,11 @@ class BatchEngine:
                 tok = jnp.where(greedy_row, tok_gr, tok_sp).astype(jnp.int32)
                 tok = jnp.where(active, tok, pad_id)
                 toks = toks.at[:, i].set(jnp.where(active, tok, -1))
+                if collect_probs:
+                    # the distribution token i was sampled from (inactive
+                    # rows write garbage; callers slice by their count)
+                    probs = probs.at[:, i].set(
+                        probs_from_logits(logits, sp).astype(jnp.float32))
                 n = n + active.astype(jnp.int32)
                 # per-row stop sets: a slot only stops the rows whose mask
                 # covers it (lets one call mix e.g. step-bounded fallback
@@ -286,11 +309,12 @@ class BatchEngine:
                     pos=jnp.where(active, old_pos + 1, old_pos))
                 logits = jnp.where(active[:, None], new_logits, logits)
                 active = active & jnp.logical_not(hit) & (i + 1 < n_max)
-                return (i + 1, active, n, new_state, logits, keys_new, toks)
+                return (i + 1, active, n, new_state, logits, keys_new,
+                        toks, probs)
 
             init = (jnp.asarray(0, jnp.int32), active0, n0, state,
-                    last_logits, keys, toks0)
-            _, _, n, state, logits, _, toks = jax.lax.while_loop(
+                    last_logits, keys, toks0, probs0)
+            _, _, n, state, logits, _, toks, probs = jax.lax.while_loop(
                 cond, body, init)
             # merge the decoded slice back into the full-capacity cache
             out_state = dataclasses.replace(
@@ -302,7 +326,7 @@ class BatchEngine:
                 jax.lax.dynamic_update_slice(full_state.v, state.v,
                                              (0, 0, 0, 0, 0)),
                 pos=state.pos)
-            return toks, n, logits, out_state
+            return toks, n, logits, out_state, probs
 
         fn = jax.jit(fused)
         self._fused_cache[cache_key] = fn
@@ -312,8 +336,8 @@ class BatchEngine:
                       stop_ids: Sequence[int], params: SamplingParams,
                       keys: Sequence[jax.Array],
                       greedy_rows: Optional[Sequence[bool]] = None,
-                      stop_ids_rows: Optional[Sequence[Sequence[int]]] = None
-                      ) -> List[List[int]]:
+                      stop_ids_rows: Optional[Sequence[Sequence[int]]] = None,
+                      collect_probs: bool = False):
         """Decode every row in ``rows`` until its own stop/budget, all in
         one fused device call.  ``max_tokens`` is an int or a per-row list;
         ``keys`` one PRNG key per row (split on-device in the same order
@@ -323,9 +347,11 @@ class BatchEngine:
         ``stop_ids_rows`` optionally gives each row its OWN stop set
         (``stop_ids`` is then ignored) — what lets the scheduler run e.g.
         step-bounded fallback rows and eos-bounded answer rows as one
-        call."""
+        call; with ``collect_probs`` also returns each involved row's
+        (n_i, V) per-step sampling distributions (the batched
+        spec-decode proposal path) as a second value."""
         if not rows:
-            return []
+            return ([], []) if collect_probs else []
         budgets = list(max_tokens) if not isinstance(max_tokens, int) \
             else [max_tokens] * len(rows)
         assert len(budgets) == len(rows) == len(keys)
@@ -342,7 +368,9 @@ class BatchEngine:
         assert all(self.pos[i] < self.capacity for i in live), \
             "a live row sits at full capacity; finish or preempt it first"
         if int(n_max.max()) == 0:
-            return [[] for _ in rows]
+            empty = [[] for _ in rows]
+            return (empty, [np.zeros((0, 0), np.float32) for _ in rows]) \
+                if collect_probs else empty
 
         buf = self._decode_buf(int(n_max.max()))
         # attend only the occupied prefix: wide enough for every involved
@@ -368,11 +396,11 @@ class BatchEngine:
         if greedy_rows is not None:
             for r, g in zip(rows, greedy_rows):
                 greedy[r] = g
-        fn = self._fused_decode_fn(buf, cap_eff, params)
+        fn = self._fused_decode_fn(buf, cap_eff, params, collect_probs)
 
         self._sync_pos()
         t0 = time.perf_counter()
-        toks, n, logits, new_state = fn(
+        toks, n, logits, new_state, probs = fn(
             self.params, self.state, jnp.asarray(self.last_logits),
             jnp.asarray(key_mat), stop_arr, jnp.asarray(stop_mask),
             jnp.asarray(n_max), jnp.asarray(greedy))
@@ -384,12 +412,89 @@ class BatchEngine:
 
         lg = np.asarray(logits, np.float32)
         out: List[List[int]] = []
+        probs_np = np.asarray(probs, np.float32) if collect_probs else None
+        probs_out: List[np.ndarray] = []
         for r in rows:
             k = int(n[r])
             out.append([int(t) for t in toks[r, :k]])
+            if collect_probs:
+                probs_out.append(probs_np[r, :k])
             if k > 0:
                 self.pos[r] += k
                 self.last_logits[r] = lg[r]
         self.state = dataclasses.replace(
             new_state, pos=jnp.asarray(self.pos, jnp.int32))
-        return out
+        return (out, probs_out) if collect_probs else out
+
+    # -------------------------------------------------------------- feed
+    def _feed_fn(self, cap_eff: int) -> Callable:
+        """One batched decode step over CHOSEN tokens (no sampling): the
+        spec-decode reconcile op — feed each involved row its final
+        suffix token, refreshing last_logits, in a single dispatch."""
+        fn = self._feed_cache.get(cap_eff)
+        if fn is not None:
+            return fn
+        model = self.model
+
+        def feed(params, full_state, toks, active):
+            state = dataclasses.replace(
+                full_state,
+                k=None if full_state.k is None else
+                full_state.k[:, :, :cap_eff],
+                v=None if full_state.v is None else
+                full_state.v[:, :, :cap_eff])
+            old_pos = state.pos
+            logits, new_state = model.decode_step(params, state,
+                                                  toks[:, None])
+            # uninvolved rows fed a pad: keep their position (the pad's
+            # cache write landed beyond it — masked until overwritten)
+            new_state = dataclasses.replace(
+                new_state, pos=jnp.where(active, old_pos + 1, old_pos))
+            out_state = dataclasses.replace(
+                full_state,
+                k=None if full_state.k is None else
+                jax.lax.dynamic_update_slice(full_state.k, new_state.k,
+                                             (0, 0, 0, 0, 0)),
+                v=None if full_state.v is None else
+                jax.lax.dynamic_update_slice(full_state.v, new_state.v,
+                                             (0, 0, 0, 0, 0)),
+                pos=new_state.pos)
+            return logits, out_state
+
+        fn = jax.jit(feed)
+        self._feed_cache[cap_eff] = fn
+        return fn
+
+    def feed_rows(self, rows: Sequence[int],
+                  tokens: Sequence[int]) -> None:
+        """Append ``tokens[i]`` to row ``rows[i]`` with ONE batched decode
+        step (the multi-row twin of ``Engine.decode_one``).  Used by the
+        batched spec-decode reconcile: after the O(1) row truncate, the
+        final suffix token is re-decoded to refresh the row's logits."""
+        assert len(rows) == len(tokens)
+        if not rows:
+            return
+        live = [i for i in range(self.batch) if self._live[i]]
+        assert all(self.pos[r] < self.capacity for r in rows), \
+            "feed would write past capacity; truncate or preempt first"
+        toks = np.full(self.batch, self.pad_id, np.int32)
+        active = np.zeros(self.batch, bool)
+        for r, t in zip(rows, tokens):
+            toks[r] = t
+            active[r] = True
+        need = max(int(self.pos[i]) for i in live) + 1
+        fn = self._feed_fn(self._cap_bucket(need))
+        self._sync_pos()
+        t0 = time.perf_counter()
+        logits, new_state = fn(self.params, self.state, jnp.asarray(toks),
+                               jnp.asarray(active))
+        logits = jax.block_until_ready(logits)     # the ONE host sync
+        self.meter.decode_time += time.perf_counter() - t0
+        self.meter.decode_tokens += len(rows)
+        self.meter.decode_calls += 1
+        lg = np.asarray(logits, np.float32)
+        for r in rows:
+            self.pos[r] += 1
+            self.last_logits[r] = lg[r]
+        self.state = dataclasses.replace(
+            new_state, pos=jnp.asarray(self.pos, jnp.int32))

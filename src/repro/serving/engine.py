@@ -70,6 +70,13 @@ class Meter:
     decode_tokens: int = 0
     decode_calls: int = 0
     decode_time: float = 0.0
+    # token-level speculation (core.spec_decode / serving.spec_engine):
+    # verification rounds run on THIS engine as the base/verifier, draft
+    # tokens proposed to it and how many it accepted — the engine-level
+    # aggregate of the per-request SpecDecodeStats
+    spec_rounds: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)

@@ -88,6 +88,18 @@ class KVManager:
     def free_blocks(self, which: str) -> int:
         return self.capacity_blocks(which) - self.used_blocks[which]
 
+    def headroom_blocks(self, step_tokens: int, gamma: int = 0) -> int:
+        """Admission headroom per in-flight request, in blocks: one
+        reasoning step plus its score-token probe — and, in spec-decode
+        mode, the worst case must ALSO cover the ``gamma`` in-flight
+        draft tokens a verification pass keeps in the cache beyond the
+        committed context, plus the reconcile feed slot.  Admitting
+        without the gamma term lets a full pool meet a mid-verification
+        grow with no victim left to preempt (regression-tested in
+        tests/test_serving.py)."""
+        inflight = step_tokens + 1 + ((gamma + 1) if gamma > 0 else 0)
+        return -(-inflight // self.block_size)
+
     def _blocks_needed(self, which: str, capacity: int, batch: int) -> int:
         cfg = self.cfgs[which]
         bb = self.block_bytes(which)

@@ -163,6 +163,28 @@ class PagedSeq:
         self.length += n_tokens
         return new_blocks, copies
 
+    def truncate(self, length: int) -> List[int]:
+        """Shrink the logical length to ``length``, releasing every block
+        wholly past it — the no-copy rollback of a rejected speculative
+        suffix (serving/spec_engine.py).  Unlike :meth:`restore` this
+        needs no snapshot: the kept prefix's blocks (including a partial
+        tail) stay owned as-is, so a tail block shared with a live
+        step-boundary snapshot keeps its refcount and a later ``append``
+        still copy-on-writes it.  Returns the block ids that became fully
+        free (observability/tests)."""
+        if not 0 <= length <= self.length:
+            raise ValueError(f"truncate to {length} outside [0, "
+                             f"{self.length}]")
+        keep = self.pool.blocks_for_tokens(length)
+        freed = []
+        for b in self.blocks[keep:]:
+            self.pool.release(b)
+            if self.pool.refcount(b) == 0:
+                freed.append(b)
+        del self.blocks[keep:]
+        self.length = length
+        return freed
+
     def snapshot(self) -> BlockTableSnapshot:
         for b in self.blocks:
             self.pool.retain(b)

@@ -20,11 +20,20 @@ phase and executes each group as ONE batched engine call:
                       merged base extend
     fallback/answer : rejected-step regenerations and final answers ->
                       one base-model fused decode with per-row stop sets
-                      (+ one small-model sync extend)
+                      (+ one small-model sync extend) — or, with ``spec``
+                      mode on, batched token-level speculative decoding
+                      through serving.spec_engine (hierarchical
+                      speculation, SpecReason+Decode §4.2): per round ONE
+                      fused draft proposal, ONE base verification
+                      prefill, ONE fused acceptance program, with
+                      rejected suffixes rolled back by per-row
+                      block-table truncation
 
 so the tick costs a handful of device dispatches regardless of how many
 requests are in flight — the step-granular structure of SpecReason (§4.1)
-is exactly the right batching unit.  Admission is by *block count*
+is exactly the right batching unit.  Spec-mode admission includes the
+gamma in-flight draft tokens per row in its worst-case block headroom, so
+a mid-verification grow always has a preemption victim.  Admission is by *block count*
 (serving/paged_kv.py pools sized from the KVManager's static partition):
 a request is admitted when its prompt plus one step of headroom fits, and
 if the pool later runs dry the youngest request is preempted (blocks
@@ -56,6 +65,7 @@ from .batch_engine import BatchEngine, RowSnapshot
 from .kv_manager import KVManager
 from .paged_kv import (BlockTableSnapshot, PagedKVPool, PagedSeq,
                        PoolExhausted)
+from .spec_engine import BatchSpecEngine, SpecLedger, SpecRow
 
 
 @dataclasses.dataclass
@@ -181,20 +191,56 @@ class _Active:
     pending_base: List[int] = dataclasses.field(default_factory=list)
 
 
+class _SchedulerLedger(SpecLedger):
+    """Bridges the spec engine's in-flight cache growth/rollback to the
+    scheduler's paged-pool accounting: every gamma-token verification
+    chunk is charged as it lands (may preempt the youngest request —
+    observed by the engine through ``alive``), every rejected suffix is
+    rolled back by block-table truncation (orphaned speculation blocks
+    freed, no copy)."""
+
+    def __init__(self, sched: "ContinuousScheduler", acts: List[_Active]):
+        self.sched = sched
+        self.acts = acts
+
+    def alive(self, i: int) -> bool:
+        return self.acts[i].alive
+
+    def grow(self, i: int, which: str, n_tokens: int) -> None:
+        a = self.acts[i]
+        if a.alive:
+            self.sched._grow(a, "base" if which == "base" else "small",
+                             n_tokens)
+
+    def truncate(self, i: int, which: str, length: int) -> None:
+        a = self.acts[i]
+        if a.alive:
+            seq = a.base_seq if which == "base" else a.small_seq
+            seq.truncate(length)
+
+
 class ContinuousScheduler:
     """Step-interleaved continuous batching over a SpecReason pair."""
 
     def __init__(self, controller: SpecReason, kv: KVManager,
                  max_batch: int = 8, context_capacity: int = 256,
-                 engine_capacity: Optional[int] = None):
+                 engine_capacity: Optional[int] = None,
+                 spec_decode: Optional[bool] = None,
+                 gamma: Optional[int] = None):
         cfg = controller.cfg
-        if cfg.use_spec_decode or cfg.overlapped:
+        if cfg.overlapped:
             raise NotImplementedError(
-                "continuous batching currently covers the plain "
-                "speculate/verify/fallback pipeline; use the sequential "
-                "Scheduler for spec_decode/overlapped modes")
+                "continuous batching covers the speculate/verify/fallback "
+                "pipeline with optional hierarchical spec decode; use the "
+                "sequential Scheduler for overlapped mode")
         self.controller = controller
         self.kv = kv
+        # hierarchical speculation: route the tick's fallback+answer
+        # decode batch through batched token-level spec decode
+        # (SpecReason+Decode, §4.2).  Defaults follow the controller cfg.
+        self.spec = cfg.use_spec_decode if spec_decode is None \
+            else spec_decode
+        self.gamma = gamma if gamma is not None else cfg.spec_gamma
         # engine capacity defaults to the sequential engines' max_len so a
         # batched row has the same reduction shapes as a sequential
         # session — the bit-exactness contract (batch_engine docstring)
@@ -210,6 +256,8 @@ class ContinuousScheduler:
                                     controller.small.params, max_batch,
                                     engine_capacity,
                                     name=f"cb-{controller.small.name}")
+        self.spec_be = BatchSpecEngine(self.base_be, self.small_be,
+                                       self.gamma) if self.spec else None
         self.pools = {
             "base": PagedKVPool(max(kv.capacity_blocks("base"), 1),
                                 kv.block_size),
@@ -234,16 +282,21 @@ class ContinuousScheduler:
 
     def _headroom_blocks(self) -> int:
         seg = self.controller.segmenter.cfg
-        return self.pools["base"].blocks_for_tokens(seg.max_step_tokens + 1)
+        return self.kv.headroom_blocks(seg.max_step_tokens,
+                                       self.gamma if self.spec else 0)
 
     def _worst_case_tokens(self, prompt_len: int) -> int:
         """Upper bound on one request's context length: prompt + thinking
         (the budget may be overshot by one capped step) + the </think>
-        closer + the answer, plus one extend bucket of padding slack."""
+        closer + the answer, plus one extend bucket of padding slack —
+        and, in spec mode, the gamma in-flight draft tokens a
+        verification pass transiently writes past the committed
+        context."""
         cfg = self.controller.cfg
         seg = self.controller.segmenter.cfg
+        spec_slack = (self.gamma + 1) if self.spec else 0
         return (prompt_len + cfg.token_budget + 2 * seg.max_step_tokens
-                + cfg.answer_max_tokens + 2 + 32)
+                + cfg.answer_max_tokens + 2 + 32 + spec_slack)
 
     def _admit(self, key: jax.Array) -> None:
         admitted: List[_Active] = []
@@ -506,7 +559,12 @@ class ContinuousScheduler:
                            ans: List[_Active]) -> None:
         """The tick's single base-model decode: fallback regenerations
         (stop at step boundaries) and final answers (stop at eos) run as
-        one fused multi-sequence call with per-row stop sets/budgets."""
+        one fused multi-sequence call with per-row stop sets/budgets — or,
+        in spec mode, through batched token-level speculative decoding
+        (hierarchical speculation: the small model drafts gamma tokens
+        per row, the base model verifies every row's chunk in one
+        prefill, rejected suffixes roll back by block-table
+        truncation)."""
         ctrl, cfg = self.controller, self.controller.cfg
         fall = [a for a in fall if a.alive]
         ans = [a for a in ans if a.alive]
@@ -514,23 +572,38 @@ class ContinuousScheduler:
         if not acts:
             return
         keys = self._split_keys(acts)
-        rows = [a.base_row for a in acts]
         budgets = [ctrl.max_step_tokens(a.state) for a in fall] \
             + [cfg.answer_max_tokens] * len(ans)
         stops = [ctrl.segmenter.stop_ids] * len(fall) + [[tk.EOS]] * len(ans)
-        outs = self.base_be.generate_rows(rows, budgets, [], cfg.sampling,
-                                          keys, stop_ids_rows=stops)
-        for a, ids in zip(acts, outs):
-            self._grow(a, "base", len(ids))
-        fall2 = [(a, ids) for a, ids in zip(fall, outs[:len(fall)])
-                 if a.alive]
-        if fall2:
-            # keep the small model's context in sync, batched
-            self.small_be.extend_rows([a.small_row for a, _ in fall2],
-                                      [ids for _, ids in fall2])
-            for a, ids in fall2:
-                self._grow(a, "small", len(ids))
-        for a, ids in fall2:
+
+        if self.spec_be is not None:
+            # hierarchical path: the spec engine owns both engines' rows
+            # for the whole decode (it keeps the small context in sync
+            # token for token, like the sequential spec_decode routine)
+            items = [SpecRow(a.base_row, a.small_row, b, st, k)
+                     for a, b, st, k in zip(acts, budgets, stops, keys)]
+            outs, round_stats = self.spec_be.decode_rows(
+                items, cfg.sampling, _SchedulerLedger(self, acts))
+            for a, s in zip(acts, round_stats):
+                if a.alive:
+                    a.state.spec_stats.merge(s)
+        else:
+            rows = [a.base_row for a in acts]
+            outs = self.base_be.generate_rows(rows, budgets, [],
+                                              cfg.sampling, keys,
+                                              stop_ids_rows=stops)
+            for a, ids in zip(acts, outs):
+                self._grow(a, "base", len(ids))
+            sync = [(a, ids) for a, ids in zip(fall, outs[:len(fall)])
+                    if a.alive]
+            if sync:
+                # keep the small model's context in sync, batched
+                self.small_be.extend_rows([a.small_row for a, _ in sync],
+                                          [ids for _, ids in sync])
+                for a, ids in sync:
+                    self._grow(a, "small", len(ids))
+
+        for a, ids in zip(fall, outs[:len(fall)]):
             if a.alive:
                 ctrl.note_base_step(a.state, ids)
         for a, ids in zip(ans, outs[len(fall):]):

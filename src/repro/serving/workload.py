@@ -83,7 +83,7 @@ def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
     toks = sum(len(h.result.thinking_ids) + len(h.result.answer_ids)
                for h in handles if h.result is not None)
     n = len(lats)
-    return {
+    out = {
         "requests": n,
         "wall_s": round(wall_s, 4),
         "req_s": round(n / wall_s, 3) if wall_s > 0 else 0.0,
@@ -92,3 +92,15 @@ def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
         "p95_latency_s": round(percentile(lats, 0.95), 4),
         "mean_latency_s": round(sum(lats) / n, 4) if n else 0.0,
     }
+    # token-level speculation (hierarchical mode): per-request acceptance
+    # rate and mean accepted draft tokens per verification round, averaged
+    # over the requests that actually ran spec-decode rounds
+    spec = [h.result.spec_stats for h in handles
+            if h.result is not None and h.result.spec_stats.rounds > 0]
+    if spec:
+        out["spec_requests"] = len(spec)
+        out["spec_acceptance_rate"] = round(
+            sum(s.acceptance_rate for s in spec) / len(spec), 4)
+        out["spec_mean_accepted_len"] = round(
+            sum(s.mean_accepted_len for s in spec) / len(spec), 4)
+    return out

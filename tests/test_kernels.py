@@ -9,6 +9,7 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_append_attention import paged_append_attention
 from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.serving.paged_kv import (PagedKVPool, PagedKVStore, PagedSeq,
@@ -200,6 +201,112 @@ def test_paged_decode_matches_dense_kernel_via_store():
     exp = decode_attention(q, kc, vc, lens_arr, block_k=bs, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ paged append
+
+
+@pytest.mark.parametrize("b,h,kh,hd,bs,nb,t", [
+    (2, 4, 2, 64, 128, 4, 5),      # GQA 2:1, gamma 4 (+bonus slot)
+    (3, 8, 2, 32, 128, 3, 8),      # GQA 4:1, wider span
+    (1, 2, 2, 128, 256, 2, 4),     # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_append_attention_sweep(b, h, kh, hd, bs, nb, t, dtype):
+    """Batched spec-verification attention (span queries over paged
+    context + in-flight draft K/V, causal within the span) against the
+    gather-then-dense oracle: ragged context AND span lengths."""
+    pages = 2 + b * nb
+    ks = jax.random.split(jax.random.PRNGKey(21), 7)
+    q = jax.random.normal(ks[0], (b, t, h, hd), dtype)
+    kn = jax.random.normal(ks[1], (b, t, kh, hd), dtype)
+    vn = jax.random.normal(ks[2], (b, t, kh, hd), dtype)
+    kp = jax.random.normal(ks[3], (pages, kh, bs, hd), dtype)
+    vp = jax.random.normal(ks[4], (pages, kh, bs, hd), dtype)
+    tbl = jnp.arange(2, 2 + b * nb, dtype=jnp.int32).reshape(b, nb)
+    ctx = jax.random.randint(ks[5], (b,), 1, nb * bs + 1)
+    span = jax.random.randint(ks[6], (b,), 1, t + 1)
+    out = paged_append_attention(q, kn, vn, kp, vp, tbl, ctx, span,
+                                 interpret=True)
+    exp = ref.paged_append_reference(q, kn, vn, kp, vp, tbl, ctx, span)
+    # outputs past a row's span are unspecified: compare the valid rows
+    valid = np.arange(t)[None, :, None, None] < \
+        np.asarray(span)[:, None, None, None]
+    np.testing.assert_allclose(
+        np.where(valid, np.asarray(out, np.float32), 0.0),
+        np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_paged_append_shared_prefix_pages():
+    """Rows aliasing prompt-prefix pages (CoW snapshots) verify exactly —
+    the kernel only reads the pool."""
+    b, h, kh, hd, bs, t = 3, 4, 2, 32, 128, 5
+    ks = jax.random.split(jax.random.PRNGKey(22), 5)
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    kn = jax.random.normal(ks[1], (b, t, kh, hd))
+    vn = jax.random.normal(ks[2], (b, t, kh, hd))
+    kp = jax.random.normal(ks[3], (8, kh, bs, hd))
+    vp = jax.random.normal(ks[4], (8, kh, bs, hd))
+    tbl = jnp.array([[1, 2, 3], [1, 2, 4], [1, 2, 5]], jnp.int32)
+    ctx = jnp.array([260, 300, 384], jnp.int32)
+    span = jnp.array([5, 3, 1], jnp.int32)
+    out = paged_append_attention(q, kn, vn, kp, vp, tbl, ctx, span,
+                                 interpret=True)
+    exp = ref.paged_append_reference(q, kn, vn, kp, vp, tbl, ctx, span)
+    valid = np.arange(t)[None, :, None, None] < \
+        np.asarray(span)[:, None, None, None]
+    np.testing.assert_allclose(np.where(valid, np.asarray(out), 0.0),
+                               np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+def test_paged_append_matches_dense_prefill_via_store():
+    """End to end vs the dense prefill path: scatter a committed context
+    into a PagedKVStore, then append-attend a draft span — must equal the
+    dense causal prefill kernel run over [context + span] at the span's
+    query positions.  This is the verification-pass contract batched
+    spec decode relies on."""
+    kh, hd, bs, h, t = 2, 32, 128, 4, 4
+    pool = PagedKVPool(num_blocks=8, block_size=bs)
+    store = PagedKVStore(pool, n_layers=1, kv_heads=kh, head_dim=hd)
+    lens = [150, 260]
+    seqs, dense_k, dense_v = [], [], []
+    ks = jax.random.split(jax.random.PRNGKey(23), 3 + 2 * len(lens))
+    for i, n in enumerate(lens):
+        seq = PagedSeq(pool)
+        seq.append(n)
+        k = jax.random.normal(ks[3 + 2 * i], (1, n, kh, hd))
+        v = jax.random.normal(ks[4 + 2 * i], (1, n, kh, hd))
+        store.scatter(seq, k, v, start=0)
+        seqs.append(seq)
+        dense_k.append(k[0])
+        dense_v.append(v[0])
+    q = jax.random.normal(ks[0], (len(lens), t, h, hd))
+    kn = jax.random.normal(ks[1], (len(lens), t, kh, hd))
+    vn = jax.random.normal(ks[2], (len(lens), t, kh, hd))
+    tbl = jnp.asarray(pad_block_tables(seqs))
+    ctx = jnp.asarray(lens, jnp.int32)
+    span = jnp.full((len(lens),), t, jnp.int32)
+    out = paged_append_attention(q, kn, vn, store.k_pages[0],
+                                 store.v_pages[0], tbl, ctx, span,
+                                 interpret=True)
+    for i, n in enumerate(lens):
+        # dense twin: one causal prefill over the full row, batch of 1;
+        # trailing pads (to the kernel's block multiple) sit AFTER the
+        # span, so the causal mask keeps them invisible to its queries
+        s_pad = -(-(n + t) // 128) * 128
+        kf = jnp.concatenate([dense_k[i], kn[i],
+                              jnp.zeros((s_pad - n - t, kh, hd))],
+                             0)[None].transpose(0, 2, 1, 3)
+        vf = jnp.concatenate([dense_v[i], vn[i],
+                              jnp.zeros((s_pad - n - t, kh, hd))],
+                             0)[None].transpose(0, 2, 1, 3)
+        qf = jnp.zeros((1, h, s_pad, hd)).at[:, :, n:n + t].set(
+            q[i].transpose(1, 0, 2)[None])
+        exp = flash_attention(qf, kf, vf, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i]),
+                                   np.asarray(exp[0, :, n:n + t].transpose(
+                                       1, 0, 2)),
+                                   rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("b,l,h,p,g,n,chunk", [

@@ -72,6 +72,33 @@ def test_snapshot_rollback_frees_orphans():
     assert pool.refcount(seq.blocks[0]) == 1   # snapshot ref consumed
 
 
+def test_truncate_releases_orphaned_suffix_blocks():
+    """Spec-decode rollback: truncating a rejected speculative suffix
+    frees every block wholly past the kept length — no snapshot, no
+    copy — and a shared tail keeps its refcount so a later append still
+    copy-on-writes it."""
+    pool = PagedKVPool(num_blocks=8, block_size=4)
+    seq = PagedSeq(pool)
+    seq.append(6)                      # 2 blocks, tail half full
+    seq.append(9)                      # gamma in-flight: 15 tokens, 4 blk
+    assert len(seq.blocks) == 4
+    freed = seq.truncate(7)            # keep accepted prefix
+    assert seq.length == 7 and len(seq.blocks) == 2
+    assert len(freed) == 2 and pool.num_used == 2
+    with pytest.raises(ValueError):
+        seq.truncate(8)                # cannot truncate upward
+    # a snapshot-shared tail survives truncation with its refcount intact
+    snap = seq.snapshot()              # length 7, 2 blocks
+    tail = seq.blocks[-1]
+    seq.append(5)                      # CoW detaches the shared tail
+    assert seq.blocks[1] != tail
+    seq.truncate(7)                    # rollback onto the CoW copy
+    assert pool.refcount(tail) == 1    # the snapshot still owns the tail
+    seq.restore(snap)
+    assert seq.length == 7 and seq.blocks[-1] == tail
+    assert pool.refcount(tail) == 1
+
+
 def test_snapshot_copy_on_write_partial_tail():
     """Appending into a snapshot-shared partial tail block must copy it
     first (the snapshot's view is immutable)."""

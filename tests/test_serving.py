@@ -194,7 +194,102 @@ def test_continuous_refuses_unservable_request(engine_pair):
 
 def test_continuous_rejects_unsupported_modes(engine_pair):
     base, small = engine_pair
-    ctrl = SpecReason(base, small, SpecReasonConfig(use_spec_decode=True))
+    ctrl = SpecReason(base, small, SpecReasonConfig(overlapped=True))
     kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
     with pytest.raises(NotImplementedError):
         ContinuousScheduler(ctrl, kv)
+    # spec-decode mode IS supported now (hierarchical speculation)
+    ctrl2 = SpecReason(base, small, SpecReasonConfig(use_spec_decode=True))
+    cs = ContinuousScheduler(ctrl2, kv)
+    assert cs.spec_be is not None and cs.gamma == ctrl2.cfg.spec_gamma
+
+
+# ------------------------------------------------- hierarchical (spec)
+
+
+def _run_spec_pair_workloads(engine_pair, n_requests=3, temperature=0.0,
+                             threshold=5.0, seed=0, max_batch=4,
+                             kv_bytes=1 << 26, kv_fraction=0.8,
+                             context_capacity=128, gamma=3):
+    """Same workload through the sequential controller WITH spec decode
+    and the continuous scheduler in spec mode."""
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
+                           token_budget=48, max_steps=6,
+                           use_spec_decode=True, spec_gamma=gamma,
+                           sampling=SamplingParams(temperature=temperature))
+    ctrl = SpecReason(base, small, cfg)
+    rng = random.Random(seed)
+    reqs = [tasks.sample_task(rng) for _ in range(n_requests)]
+    keys = [jax.random.PRNGKey(100 * seed + i) for i in range(n_requests)]
+    seq = [ctrl.run(tasks.question_tokens(t), k)
+           for t, k in zip(reqs, keys)]
+    kv = KVManager(BASE_CFG, SMALL_CFG,
+                   KVBudget(total_bytes=kv_bytes,
+                            base_fraction=kv_fraction))
+    cs = ContinuousScheduler(ctrl, kv, max_batch=max_batch,
+                             context_capacity=context_capacity)
+    handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    cs.drain(jax.random.PRNGKey(9))
+    return seq, handles, cs
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_continuous_spec_equivalent_to_sequential(engine_pair,
+                                                  temperature):
+    """Hierarchical speculation acceptance bar: with --spec-decode the
+    continuous scheduler produces, per request, IDENTICAL thinking
+    tokens, answers and spec-decode stats to the sequential controller
+    running spec_decode — greedy AND sampled (both paths execute the
+    same fused acceptance program)."""
+    seq, handles, cs = _run_spec_pair_workloads(engine_pair,
+                                                temperature=temperature,
+                                                seed=4)
+    assert len(cs.done) == len(handles)
+    for r_seq, h in zip(seq, handles):
+        r_cb = h.result
+        assert r_cb is not None
+        assert r_cb.thinking_ids == r_seq.thinking_ids
+        assert r_cb.answer_ids == r_seq.answer_ids
+        assert (r_cb.spec_stats.proposed, r_cb.spec_stats.accepted,
+                r_cb.spec_stats.rounds) == \
+            (r_seq.spec_stats.proposed, r_seq.spec_stats.accepted,
+             r_seq.spec_stats.rounds)
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
+    assert cs.base_be.free_rows == cs.base_be.batch
+    assert cs.small_be.free_rows == cs.small_be.batch
+
+
+def test_spec_admission_headroom_includes_gamma(engine_pair):
+    """Spec-mode admission must reserve the gamma in-flight draft tokens
+    per row (kv_manager.headroom_blocks)."""
+    base, small = engine_pair
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    bs = kv.block_size
+    assert kv.headroom_blocks(24, gamma=0) == -(-(24 + 1) // bs)
+    assert kv.headroom_blocks(24, gamma=4) == -(-(24 + 1 + 5) // bs)
+    ctrl_plain = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=48))
+    ctrl_spec = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=48,
+        use_spec_decode=True, spec_gamma=8))
+    cs_plain = ContinuousScheduler(ctrl_plain, kv, context_capacity=128)
+    cs_spec = ContinuousScheduler(ctrl_spec, kv, context_capacity=128)
+    assert cs_spec._headroom_blocks() > cs_plain._headroom_blocks()
+    assert cs_spec._worst_case_tokens(10) > cs_plain._worst_case_tokens(10)
+
+
+def test_spec_pool_exhaustion_mid_verification_preempts(engine_pair):
+    """Regression: a pool too small for every in-flight verification
+    chunk must PREEMPT the youngest request mid-verification (recompute)
+    — not assert or leak blocks — and still finish every request with
+    sequential-identical outputs."""
+    seq, handles, cs = _run_spec_pair_workloads(
+        engine_pair, n_requests=4, kv_bytes=90_000, kv_fraction=0.5,
+        max_batch=4, threshold=9.5)      # high threshold: fallback-heavy
+    assert cs.preemptions > 0
+    assert len(cs.done) == 4
+    for r_seq, h in zip(seq, handles):
+        assert h.result.thinking_ids == r_seq.thinking_ids
+        assert h.result.answer_ids == r_seq.answer_ids
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
