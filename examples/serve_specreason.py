@@ -4,7 +4,12 @@ comparing all five schemes from the paper's Fig 3 — then the same
 workload through the continuous-batching scheduler with *hierarchical
 speculation* on (``--spec-decode --gamma 4``, SpecReason+Decode §4.2),
 printing the per-request acceptance-rate breakdown
-(``spec[acc=.. len=../..r]``) alongside the usual meter output.
+(``spec[acc=.. len=../..r]``) alongside the usual meter output — and
+finally a *self-consistency* demo (``--num-samples 4 --vote``): every
+prompt sampled four times through the radix prefix cache (the three
+re-prefills are cache hits, see ``cache[hit=H/P]`` per request), the
+final answer majority-voted with the per-task vote breakdown and the
+aggregate cache hit rate printed.
 
 Decoding runs through the engines' fused on-device loop and the
 per-engine meter breakdown is printed per request (add ``--decode-loop
@@ -48,3 +53,16 @@ if __name__ == "__main__":
     hier_argv = [a for a in hier_argv if a != "--meters"]
     main(["--scheduler", "continuous", "--spec-decode", "--gamma", gamma,
           "--meters", *hier_argv])
+
+    # 3) self-consistency over the radix prefix cache: four sampled
+    # chains per prompt (three of the four prefills are cache hits),
+    # answers majority-voted — vote breakdown + cache hit rate printed
+    print("\n--- self-consistency (continuous scheduler, "
+          "--num-samples 4 --vote) ---")
+    sc_argv = [a for a in hier_argv if a != "--vote"]
+    for flag in ("--num-samples",):
+        if flag in sc_argv:
+            i = sc_argv.index(flag)
+            sc_argv = sc_argv[:i] + sc_argv[i + 2:]
+    main(["--scheduler", "continuous", "--num-samples", "4", "--vote",
+          *sc_argv])

@@ -23,6 +23,18 @@ rejected suffixes rolled back by paged block-table truncation.  Outputs
 stay token-identical to spec-off greedy serving; per-request acceptance
 rate and mean accepted length are reported alongside the meters.
 
+The continuous scheduler carries a radix-tree **prefix cache** over its
+paged KV pools (on by default; ``--no-prefix-cache`` to disable): prompts
+sharing a block-aligned prefix — best-of-N samples, template families,
+preempted-and-readmitted requests — prefill only their suffix, the rest
+restored from shared refcounted cached blocks.  Per-request lines show
+``cache[hit=H/P]`` and the summary reports the aggregate hit rate.
+
+``--num-samples N --vote`` turns the workload into best-of-N
+self-consistency: every prompt is sampled N times (the N-1 re-prefills
+are cache hits) and the final answer is the majority vote over the N
+sampled answers, with the per-task vote breakdown printed.
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
@@ -30,6 +42,8 @@ rate and mean accepted length are reported alongside the meters.
       --batch 8 -n 16 --arrival-rate 2
   PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \\
       --spec-decode --gamma 4 --batch 8 -n 16
+  PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \\
+      --num-samples 4 --vote -n 4
 """
 
 from __future__ import annotations
@@ -49,7 +63,8 @@ from ..sampling.sample import SamplingParams
 from ..serving.kv_manager import KVBudget, KVManager
 from ..serving.loader import load_testbed_engines
 from ..serving.scheduler import ContinuousScheduler
-from ..serving.workload import poisson_arrivals, run_workload, summarize
+from ..serving.workload import (expand_best_of_n, majority_vote,
+                                poisson_arrivals, run_workload, summarize)
 from ..tokenizer import toy as tk
 
 SCHEMES = ("base", "small", "specdecode", "specreason", "specreason+decode")
@@ -82,6 +97,10 @@ def _meter_line(name: str, m: dict) -> str:
     if m.get("spec_rounds"):
         line += (f", spec {m['spec_accepted']}/{m['spec_proposed']} "
                  f"accepted over {m['spec_rounds']} rounds")
+    if m.get("cache_lookup_tokens"):
+        line += (f", cache {m['cache_hit_tokens']}"
+                 f"/{m['cache_lookup_tokens']} prompt tok "
+                 f"({m.get('cache_evictions', 0)} evictions)")
     return line
 
 
@@ -92,6 +111,13 @@ def _spec_suffix(res) -> str:
         return ""
     return (f" spec[acc={s.acceptance_rate:.2f} "
             f"len={s.mean_accepted_len:.1f}/{s.rounds}r]")
+
+
+def _cache_suffix(h) -> str:
+    """Per-request radix prefix-cache line: cached/total prompt tokens."""
+    if not h.prompt_tokens:
+        return ""
+    return f" cache[hit={h.cache_hit_tokens}/{h.prompt_tokens}]"
 
 
 def serve_continuous(args, base, small, reqs, fused: bool) -> None:
@@ -110,10 +136,15 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                    KVBudget(total_bytes=args.kv_budget_mb << 20))
     sched = ContinuousScheduler(ctrl, kv, max_batch=args.batch,
                                 context_capacity=min(base.max_len,
-                                                     args.budget + 64))
+                                                     args.budget + 64),
+                                prefix_cache=not args.no_prefix_cache)
     rng = random.Random(args.seed)
     pairs = [(t, jax.random.PRNGKey(1000 * args.seed + i))
              for i, t in enumerate(reqs)]
+    if args.num_samples > 1:
+        # best-of-N / self-consistency: every prompt becomes N sampled
+        # reasoning chains whose prefills share one set of cached blocks
+        pairs = expand_best_of_n(pairs, args.num_samples)
     arrivals = poisson_arrivals(len(pairs), args.arrival_rate, rng)
     t0 = time.perf_counter()
     handles = run_workload(sched, pairs, arrivals)
@@ -124,19 +155,40 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
         ok = is_correct(h.task, res.answer_ids)
         print(f"[{tag}] req{i}: {'OK ' if ok else 'BAD'} "
               f"lat={h.e2e_latency:.2f}s think={res.n_thinking_tokens}"
-              f"{_spec_suffix(res)} answer={tk.detok(res.answer_ids)}")
+              f"{_spec_suffix(res)}{_cache_suffix(h)} "
+              f"answer={tk.detok(res.answer_ids)}")
         if args.meters:
             for name, m in res.meters.items():
                 print(_meter_line(name, m))
     stats = summarize(handles, wall)
+    accuracy = sum(is_correct(h.task, h.result.answer_ids)
+                   for h in handles) / max(len(handles), 1)
+    if args.vote:
+        votes = majority_vote(handles, args.num_samples)
+        for i, v in enumerate(votes):
+            ok = is_correct(v.task, v.winner_ids)
+            breakdown = ", ".join(
+                f"{tk.detok(list(a))}x{c}"
+                for a, c in sorted(v.counts.items(),
+                                   key=lambda kv_: -kv_[1]))
+            print(f"[vote] task{i}: {'OK ' if ok else 'BAD'} "
+                  f"agree={v.agreement:.2f} [{breakdown}] "
+                  f"-> {tk.detok(v.winner_ids)}")
+        accuracy = sum(is_correct(v.task, v.winner_ids)
+                       for v in votes) / max(len(votes), 1)
     stats.update({
         "scheduler": "continuous", "batch": args.batch,
         "spec_decode": args.spec_decode, "gamma": args.gamma,
         "arrival_rate": args.arrival_rate, "ticks": sched.ticks,
         "preemptions": sched.preemptions,
-        "accuracy": sum(is_correct(h.task, h.result.answer_ids)
-                        for h in handles) / max(len(handles), 1),
+        "prefix_cache": not args.no_prefix_cache,
+        "num_samples": args.num_samples, "vote": args.vote,
+        "accuracy": accuracy,
     })
+    stats.update({f"cache_{w}_{k}": v
+                  for w, s in sched.cache_stats().items()
+                  for k, v in s.items() if k in ("hit_rate",
+                                                 "evicted_blocks")})
     print(json.dumps(stats))
 
 
@@ -176,6 +228,18 @@ def main(argv=None):
     ap.add_argument("--gamma", type=int, default=4,
                     help="spec decode: draft tokens proposed per "
                          "verification round")
+    ap.add_argument("--num-samples", type=int, default=1,
+                    help="best-of-N / self-consistency: sample N "
+                         "reasoning chains per prompt (continuous "
+                         "scheduler; the radix prefix cache makes the "
+                         "N-1 extra prefills cache hits)")
+    ap.add_argument("--vote", action="store_true",
+                    help="majority-vote the N sampled answers per prompt "
+                         "(accuracy is then per-task, over the voted "
+                         "answers)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix prefix cache over the paged "
+                         "KV pools (continuous scheduler)")
     args = ap.parse_args(argv)
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "
@@ -184,6 +248,14 @@ def main(argv=None):
         ap.error("--spec-decode rides on the continuous scheduler; add "
                  "--scheduler continuous (the sequential regime's "
                  "specreason+decode scheme covers the one-at-a-time case)")
+    if args.num_samples < 1:
+        ap.error("--num-samples must be >= 1")
+    if args.num_samples > 1 and args.scheduler != "continuous":
+        ap.error("--num-samples rides on the continuous scheduler (the "
+                 "prefix cache that makes best-of-N cheap lives there); "
+                 "add --scheduler continuous")
+    if args.vote and args.num_samples < 2:
+        ap.error("--vote needs --num-samples >= 2")
 
     fused = args.decode_loop == "fused"
     base, small = load_testbed_engines(args.ckpt_dir)

@@ -85,6 +85,7 @@ class BatchEngine:
         self._fused_cache: Dict[Tuple[int, int, SamplingParams, bool],
                                 Callable] = {}
         self._feed_cache: Dict[int, Callable] = {}
+        self._import_cache: Dict[Tuple[int, int], Callable] = {}
 
     # ------------------------------------------------------------- rows
     def alloc_row(self) -> Optional[int]:
@@ -425,6 +426,118 @@ class BatchEngine:
         self.state = dataclasses.replace(
             new_state, pos=jnp.asarray(self.pos, jnp.int32))
         return (out, probs_out) if collect_probs else out
+
+    # ------------------------------------------------------ prefix cache
+    def kv_dims(self) -> Tuple[int, int, int]:
+        """(n_layers, kv_heads, head_dim) of the attention cache — the
+        page dimensions a PrefixKVStore for this engine needs."""
+        ll, _, _, kh, hd = self.state.k.shape
+        return ll, kh, hd
+
+    def export_prefix(self, row: int, start: int, end: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """Dense ``(L, end-start, kv, hd)`` K/V slices of one row's cache
+        — the radix cache's insertion source.  Valid for token offsets
+        the row has actually prefilled (``end <= pos[row]``)."""
+        assert self._live[row], f"export from dead row {row}"
+        assert 0 <= start <= end <= self.pos[row], \
+            f"row {row}: export [{start}, {end}) outside prefilled " \
+            f"[0, {self.pos[row]})"
+        return (self.state.k[:, row, start:end],
+                self.state.v[:, row, start:end])
+
+    def load_prefix(self, row: int, k: jax.Array, v: jax.Array) -> None:
+        """Seed a FRESH row's cache with ``n`` tokens of precomputed KV
+        (a radix prefix-cache hit): writes ``k``/``v`` of shape
+        ``(L, n, kv, hd)`` at offsets ``0..n-1`` and advances the row to
+        position ``n``.  The row's ``last_logits`` stay stale — the
+        caller must prefill at least one suffix token (the cache's
+        block-aligned match rule guarantees one remains) before anything
+        samples from the row."""
+        assert self._live[row], f"load into dead row {row}"
+        assert self.pos[row] == 0, \
+            f"load_prefix onto non-fresh row {row} at pos {self.pos[row]}"
+        n = k.shape[1]
+        assert 0 < n <= self.capacity
+        self.state = dataclasses.replace(
+            self.state,
+            k=self.state.k.at[:, row, :n].set(
+                k.astype(self.state.k.dtype)),
+            v=self.state.v.at[:, row, :n].set(
+                v.astype(self.state.v.dtype)))
+        self.pos[row] = n
+
+    def _import_fn(self, shape: Tuple[int, int]) -> Callable:
+        """One fused gather-pages-and-seed-rows program per
+        (n_rows, max_chain_blocks): a whole tick's prefix-cache hits land
+        in ONE device dispatch instead of a read + two writes per row."""
+        fn = self._import_cache.get(shape)
+        if fn is not None:
+            return fn
+        n_rows, nb = shape
+
+        def imp(k_cache, v_cache, k_pages, v_pages, slots, rows):
+            kg = k_pages[:, slots]            # (L, R, nb, bs, kv, hd)
+            vg = v_pages[:, slots]
+            ll, _, _, bs, kh, hd = kg.shape
+            kg = kg.reshape(ll, n_rows, nb * bs, kh, hd)
+            vg = vg.reshape(ll, n_rows, nb * bs, kh, hd)
+            k_cache = k_cache.at[:, rows, :nb * bs].set(
+                kg.astype(k_cache.dtype))
+            v_cache = v_cache.at[:, rows, :nb * bs].set(
+                vg.astype(v_cache.dtype))
+            return k_cache, v_cache
+
+        # donating the caches makes the seed an in-place page write, not
+        # a full-cache copy.  Safe HERE (unlike the model jits, see
+        # DESIGN.md §Snapshot/rollback): BatchEngine holds exactly one
+        # live state, RowSnapshots carry no tensor references, and the
+        # caller replaces self.state with the result immediately.
+        fn = jax.jit(imp, donate_argnums=(0, 1))
+        self._import_cache[shape] = fn
+        return fn
+
+    def load_prefix_pages(self, row: int, k_pages: jax.Array,
+                          v_pages: jax.Array,
+                          slots: Sequence[int]) -> None:
+        """``load_prefix`` from a PrefixKVStore's page arrays: gather the
+        cached chain's ``slots`` and seed the fresh row in one jitted
+        dispatch.  Advances the row to ``len(slots) * block_size``; the
+        caller still owes the suffix prefill (see ``load_prefix``)."""
+        self.load_prefix_pages_rows([row], k_pages, v_pages, [slots])
+
+    def load_prefix_pages_rows(self, rows: Sequence[int],
+                               k_pages: jax.Array, v_pages: jax.Array,
+                               slot_lists: Sequence[Sequence[int]]
+                               ) -> None:
+        """Seed EVERY row in ``rows`` from its cached chain in ONE jitted
+        dispatch (the per-tick batched import: a tick admitting R cache
+        hits costs one device call per engine, not R).  Ragged chains are
+        padded to the longest with slot 0 — the padded blocks write
+        garbage tokens past that row's position, invisible to attention
+        and overwritten before ever becoming visible (the trailing-pad
+        argument extend_rows already relies on)."""
+        assert len(rows) == len(slot_lists)
+        if not rows:
+            return
+        bs = k_pages.shape[2]
+        max_nb = max(len(s) for s in slot_lists)
+        assert max_nb > 0 and all(slot_lists), "empty chain in batched load"
+        slot_mat = np.zeros((len(rows), max_nb), np.int32)
+        for i, (row, slots) in enumerate(zip(rows, slot_lists)):
+            assert self._live[row], f"load into dead row {row}"
+            assert self.pos[row] == 0, \
+                f"load_prefix onto non-fresh row {row} at pos " \
+                f"{self.pos[row]}"
+            assert 0 < len(slots) * bs <= self.capacity
+            slot_mat[i, :len(slots)] = list(slots)
+        fn = self._import_fn((len(rows), max_nb))
+        k, v = fn(self.state.k, self.state.v, k_pages, v_pages,
+                  jnp.asarray(slot_mat),
+                  jnp.asarray(list(rows), jnp.int32))
+        self.state = dataclasses.replace(self.state, k=k, v=v)
+        for row, slots in zip(rows, slot_lists):
+            self.pos[row] = len(slots) * bs
 
     # -------------------------------------------------------------- feed
     def _feed_fn(self, cap_eff: int) -> Callable:

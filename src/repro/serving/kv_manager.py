@@ -100,6 +100,19 @@ class KVManager:
         inflight = step_tokens + 1 + ((gamma + 1) if gamma > 0 else 0)
         return -(-inflight // self.block_size)
 
+    def prefix_cache_blocks(self, which: str, fraction: float = 0.25,
+                            max_blocks: int = 256) -> int:
+        """Default physical sizing for ``which``'s radix prefix cache
+        (serving.prefix_cache.PrefixKVStore): a fraction of the
+        partition's block capacity, capped — cached pages are a
+        *secondary* copy of prompt KV (the dense rows hold the working
+        copies), so the store must never rival the partition itself.
+        The cache's POOL accounting needs no separate budget: cached
+        blocks are ordinary refcounted pool blocks and eviction yields
+        them back under admission pressure."""
+        return max(1, min(int(self.capacity_blocks(which) * fraction),
+                          max_blocks))
+
     def _blocks_needed(self, which: str, capacity: int, batch: int) -> int:
         cfg = self.cfgs[which]
         bb = self.block_bytes(which)

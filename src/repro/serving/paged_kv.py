@@ -163,15 +163,29 @@ class PagedSeq:
         self.length += n_tokens
         return new_blocks, copies
 
-    def truncate(self, length: int) -> List[int]:
+    def truncate(self, length: int
+                 ) -> Tuple[List[int], List[Tuple[int, int]]]:
         """Shrink the logical length to ``length``, releasing every block
         wholly past it — the no-copy rollback of a rejected speculative
         suffix (serving/spec_engine.py).  Unlike :meth:`restore` this
-        needs no snapshot: the kept prefix's blocks (including a partial
-        tail) stay owned as-is, so a tail block shared with a live
-        step-boundary snapshot keeps its refcount and a later ``append``
-        still copy-on-writes it.  Returns the block ids that became fully
-        free (observability/tests)."""
+        needs no snapshot.
+
+        Copy-on-write on the kept tail: when ``length`` lands *inside* a
+        block whose refcount > 1 — a radix-cached prefix block or a live
+        step-boundary snapshot — the truncated sequence must not keep
+        writable claim on slots past ``length`` that the other owner
+        still reads (a spec-decode rollback into a cached prefix would
+        otherwise let the row's next in-place write corrupt every
+        sequence sharing that block).  The shared tail is detached onto a
+        fresh block instead of being kept (or freed) shared: the emitted
+        ``(src, dst)`` copy pair is the physical page copy a paged store
+        must execute, exactly like :meth:`append`'s CoW list.  If the
+        pool cannot supply a fresh block even after the suffix release,
+        the tail stays shared (the next ``append`` will CoW it; safe for
+        accounting-only callers whose physical rows are dense).
+
+        Returns ``(freed, copies)``: the block ids that became fully free
+        and the CoW copy list (both for the physical store and tests)."""
         if not 0 <= length <= self.length:
             raise ValueError(f"truncate to {length} outside [0, "
                              f"{self.length}]")
@@ -182,8 +196,38 @@ class PagedSeq:
             if self.pool.refcount(b) == 0:
                 freed.append(b)
         del self.blocks[keep:]
+        copies: List[Tuple[int, int]] = []
+        if length % self.pool.block_size != 0 and self.blocks \
+                and self.pool.refcount(self.blocks[-1]) > 1:
+            tail = self.blocks[-1]
+            try:
+                fresh = self.pool.alloc()
+            except PoolExhausted:
+                fresh = None    # keep sharing; append will CoW later
+            if fresh is not None:
+                copies.append((tail, fresh))
+                self.blocks[-1] = fresh
+                self.pool.release(tail)
         self.length = length
-        return freed
+        return freed, copies
+
+    def adopt(self, blocks: Sequence[int], n_tokens: int) -> None:
+        """Initialize an empty sequence onto SHARED blocks — the radix
+        prefix-cache hit path: the cached prefix's blocks enter this
+        sequence's table with one new reference each (the cache keeps its
+        own), so the prefix is shared read-only until this sequence
+        appends into a partial tail (CoW) or frees."""
+        if self.blocks or self.length:
+            raise ValueError("adopt onto a non-empty sequence")
+        if self.pool.blocks_for_tokens(n_tokens) != len(blocks):
+            raise ValueError(
+                f"adopt of {n_tokens} tokens needs "
+                f"{self.pool.blocks_for_tokens(n_tokens)} blocks, "
+                f"got {len(blocks)}")
+        for b in blocks:
+            self.pool.retain(b)
+        self.blocks = list(blocks)
+        self.length = n_tokens
 
     def snapshot(self) -> BlockTableSnapshot:
         for b in self.blocks:

@@ -1,0 +1,404 @@
+"""Radix-tree prefix cache over the paged KV pool: automatic KV reuse
+for shared prompt prefixes across the whole serving stack.
+
+Why: the serving loop's prefill work overlaps heavily — requests share
+system/task prompt templates, preempted requests were recomputed from
+scratch, and inference-time-compute workloads (best-of-N /
+self-consistency) sample N reasoning chains from one identical prompt.
+Tree-style reasoning accelerators and SGLang-style radix caches make
+shared-prefix KV reuse a first-class lever; here it composes with the
+existing refcounted block machinery in ``serving.paged_kv``.
+
+Structure — a trie whose edges are whole KV blocks:
+
+  * every node is ONE full block of ``block_size`` tokens, identified by
+    its token tuple under its parent (equivalently: the chain hash of all
+    tokens up to and including the block — ``node.chain_hash`` keeps the
+    rolling hash for observability);
+  * ``node.block`` is a **pool block id** on which the cache holds one
+    reference, so the pool's refcounts are the single source of truth for
+    sharing: a cached block referenced only by the cache (refcount 1) is
+    evictable; a block some live sequence has adopted (refcount > 1) is
+    in-flight and untouchable;
+  * ``node.slot`` is the block's physical page in a :class:`PrefixKVStore`
+    — a small slot-indexed page array holding KV for *cached* blocks only
+    (the dense batch-engine rows remain the live working copies, see
+    DESIGN.md §Prefix cache).
+
+Match rule (block-aligned): a lookup walks full blocks of the prompt and
+returns the longest cached chain; a full-prompt match drops its last
+block so at least one token always remains to prefill (the suffix prefill
+is what produces the row's ``last_logits``).
+
+Eviction: LRU-first over evictable *leaves* (no children, pool refcount
+1, not pinned), cascading upward as parents become leaves.  Triggered by
+pool pressure (scheduler admission / mid-serve grow, *before* preempting
+a victim) and by physical slot pressure (insertion into a full store).
+
+Ownership protocol with ``PagedSeq``:
+
+  hit    -> ``PagedSeq.adopt(blocks, n)``: +1 ref per block (the cache
+            keeps its own ref); the prefix is shared read-only and the
+            CoW rules in ``append``/``truncate`` protect it thereafter.
+  insert -> the cache retains (+1) each newly cached block of a freshly
+            prefilled prompt and copies its KV into a store slot; the
+            owning sequence's later free only drops its own ref.
+  evict  -> release the cache's ref; refcount hits 0 and the block
+            returns to the pool's free list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .engine import Meter
+from .paged_kv import PagedKVPool
+
+
+def _chain_hash(parent: int, tokens: Tuple[int, ...]) -> int:
+    """Stable rolling per-block hash (observability / logging; exactness
+    comes from keying children by the token tuple itself)."""
+    h = parent
+    for t in tokens:
+        h = (h * 1000003 + int(t) + 1) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+class PrefixKVStore:
+    """Physical pages for CACHED blocks only: per layer a
+    ``(n_slots, block_size, kv_heads, head_dim)`` page array pair,
+    slot-indexed (slots are allocated per cached node, independent of
+    pool block ids — the pool id stays the accounting identity while the
+    store stays small: ``n_slots`` caps the cache, not the pool).
+
+    Token-major layout (unlike ``PagedKVStore``'s kernel-oriented
+    ``(kv, bs, hd)``) so a multi-block read/write is one gather/reshape
+    against the dense ``(L, n_tokens, kv, hd)`` row slices the batch
+    engine exports and imports."""
+
+    def __init__(self, n_slots: int, n_layers: int, kv_heads: int,
+                 head_dim: int, block_size: int, dtype=jnp.float32):
+        if n_slots <= 0:
+            raise ValueError("PrefixKVStore needs at least one slot")
+        self.n_slots = n_slots
+        self.block_size = block_size
+        shape = (n_layers, n_slots, block_size, kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def alloc_slot(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def free_slot(self, slot: int) -> None:
+        assert slot not in self._free, f"double free of slot {slot}"
+        self._free.append(slot)
+
+    def write(self, slots: Sequence[int], k: jax.Array,
+              v: jax.Array) -> None:
+        """Store KV for len(slots) consecutive blocks: ``k``/``v`` are
+        dense ``(L, len(slots)*block_size, kv, hd)`` slices."""
+        ns, bs = len(slots), self.block_size
+        assert k.shape[1] == ns * bs, (k.shape, ns, bs)
+        idx = jnp.asarray(list(slots), jnp.int32)
+        kb = k.reshape(k.shape[0], ns, bs, *k.shape[2:])
+        vb = v.reshape(v.shape[0], ns, bs, *v.shape[2:])
+        self.k_pages = self.k_pages.at[:, idx].set(
+            kb.astype(self.k_pages.dtype))
+        self.v_pages = self.v_pages.at[:, idx].set(
+            vb.astype(self.v_pages.dtype))
+
+    def read(self, slots: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+        """Dense ``(L, len(slots)*block_size, kv, hd)`` KV for a cached
+        block chain — what ``BatchEngine.load_prefix`` consumes."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        k = self.k_pages[:, idx]
+        v = self.v_pages[:, idx]
+        ll, ns, bs = k.shape[0], k.shape[1], k.shape[2]
+        return (k.reshape(ll, ns * bs, *k.shape[3:]),
+                v.reshape(ll, ns * bs, *v.shape[3:]))
+
+
+@dataclasses.dataclass
+class _Node:
+    tokens: Tuple[int, ...]
+    block: int                       # pool block id (cache holds one ref)
+    slot: int                        # PrefixKVStore page slot
+    parent: Optional["_Node"]
+    chain_hash: int
+    children: Dict[Tuple[int, ...], "_Node"] = dataclasses.field(
+        default_factory=dict)
+    last_used: int = 0
+    pinned: bool = False
+
+
+@dataclasses.dataclass
+class CacheStats:
+    lookups: int = 0
+    hits: int = 0                    # lookups that matched >= 1 block
+    hit_tokens: int = 0
+    lookup_tokens: int = 0
+    inserted_blocks: int = 0
+    evicted_blocks: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_tokens / self.lookup_tokens \
+            if self.lookup_tokens else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = round(self.hit_rate, 4)
+        return d
+
+
+class RadixCache:
+    """The radix-tree prefix cache over one engine's pool + store."""
+
+    def __init__(self, pool: PagedKVPool, store: PrefixKVStore,
+                 meter: Optional[Meter] = None):
+        if store.block_size != pool.block_size:
+            raise ValueError("store/pool block_size mismatch")
+        self.pool = pool
+        self.store = store
+        self.meter = meter
+        self.bs = pool.block_size
+        self.root = _Node(tokens=(), block=-1, slot=-1, parent=None,
+                          chain_hash=_chain_hash(0xCBF29CE4, ()))
+        self.stats = CacheStats()
+        self._clock = 0
+        self._nodes = 0              # cached blocks (excludes root)
+
+    # ------------------------------------------------------------ queries
+    @property
+    def cached_blocks(self) -> int:
+        return self._nodes
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _walk(self, tokens: Sequence[int]) -> List[_Node]:
+        """Longest cached block-aligned chain for ``tokens`` (no LRU
+        touch, no stats)."""
+        chain: List[_Node] = []
+        node = self.root
+        for i in range(len(tokens) // self.bs):
+            key = tuple(int(t) for t in tokens[i * self.bs:
+                                               (i + 1) * self.bs])
+            child = node.children.get(key)
+            if child is None:
+                break
+            chain.append(child)
+            node = child
+        return chain
+
+    def peek(self, tokens: Sequence[int]) -> int:
+        """Length (in tokens) of the longest cached block-aligned prefix
+        of ``tokens`` under the match rule — only whole cached blocks
+        count, and a match covering the ENTIRE prompt drops its last
+        block so at least one token always remains to prefill.  Pure:
+        no stats, no LRU touch (the scheduler peeks BOTH engines' caches
+        to pick the common hit, then ``acquire``s exactly that much)."""
+        chain = self._walk(tokens)
+        if chain and len(chain) * self.bs == len(tokens):
+            chain = chain[:-1]
+        return len(chain) * self.bs
+
+    def acquire(self, tokens: Sequence[int], n_tokens: int
+                ) -> Tuple[List[int], List[int]]:
+        """Resolve the first ``n_tokens`` (block-aligned, ``<= peek``) of
+        ``tokens`` to their cached chain: returns ``(blocks, slots)`` and
+        touches LRU clocks.  Does NOT retain — ``PagedSeq.adopt`` takes
+        the sequence's own references — and does NOT count stats (the
+        scheduler records once per *successful* admission via
+        :meth:`record`; a failed admission retries the same lookup)."""
+        assert n_tokens % self.bs == 0, n_tokens
+        chain = self._walk(tokens)[:n_tokens // self.bs]
+        assert len(chain) * self.bs == n_tokens, \
+            f"acquire of {n_tokens} tokens but only " \
+            f"{len(chain) * self.bs} cached"
+        now = self._tick()
+        for n in chain:
+            n.last_used = now
+        return [n.block for n in chain], [n.slot for n in chain]
+
+    def record(self, lookup_tokens: int, hit_tokens: int) -> None:
+        """Count one lookup's outcome (stats + the engine meter)."""
+        self.stats.lookups += 1
+        self.stats.lookup_tokens += lookup_tokens
+        self.stats.hit_tokens += hit_tokens
+        self.stats.hits += hit_tokens > 0
+        if self.meter is not None:
+            self.meter.cache_lookup_tokens += lookup_tokens
+            self.meter.cache_hit_tokens += hit_tokens
+
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], List[int],
+                                                    int]:
+        """``peek`` + ``acquire`` + ``record`` in one call (the
+        single-cache path): resolve the longest cached block-aligned
+        prefix of ``tokens``, returning ``(blocks, slots, n_tokens)``."""
+        hit = self.peek(tokens)
+        blocks, slots = self.acquire(tokens, hit)
+        self.record(len(tokens), hit)
+        return blocks, slots, hit
+
+    # ------------------------------------------------------------- insert
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int],
+               fetch: Callable[[int, int], Tuple[jax.Array, jax.Array]]
+               ) -> int:
+        """Cache every full block of ``tokens`` not already cached.
+
+        ``blocks[i]`` is the owning sequence's pool block holding tokens
+        ``[i*bs, (i+1)*bs)``; the cache retains (+1) each newly inserted
+        block and copies its KV into a store slot via
+        ``fetch(tok_start, tok_end) -> (k, v)`` (dense ``(L, n, kv, hd)``
+        slices — the batch engine's ``export_prefix``).  Insertion under
+        slot pressure evicts LRU cache-only entries; when nothing is
+        evictable the remaining suffix is simply not cached.  Returns the
+        number of blocks newly inserted."""
+        nb = len(tokens) // self.bs
+        assert len(blocks) >= nb, (len(blocks), nb)
+        node = self.root
+        now = self._tick()
+        # the already-cached prefix is contiguous from the root (trie
+        # property: the first missing block's descendants cannot exist),
+        # so everything after the first miss is new
+        first_new = nb
+        walked: List[_Node] = []
+        for i in range(nb):
+            key = tuple(int(t) for t in tokens[i * self.bs:
+                                               (i + 1) * self.bs])
+            child = node.children.get(key)
+            if child is None:
+                first_new = i
+                break
+            child.last_used = now
+            walked.append(child)
+            node = child
+        # allocate slots for the whole new run up front (evicting LRU
+        # cache-only entries under slot pressure; stop early when
+        # nothing more is evictable).  The walked chain is pinned for
+        # the duration: the inserting sequence need not have adopted it
+        # (the scheduler adopts the COMMON hit across engines), and
+        # evicting the attach point would leave the new nodes hanging
+        # off a detached subtree — unreachable, permanently leaked.
+        was_pinned = [n.pinned for n in walked]
+        for n in walked:
+            n.pinned = True
+        slots: List[int] = []
+        try:
+            for _ in range(nb - first_new):
+                slot = self.store.alloc_slot()
+                if slot is None:
+                    if self.evict(1) == 0:
+                        break        # store full of in-flight entries
+                    slot = self.store.alloc_slot()
+                    assert slot is not None
+                slots.append(slot)
+        finally:
+            for n, p in zip(walked, was_pinned):
+                n.pinned = p
+        if not slots:
+            return 0
+        # ONE fetch + ONE page write for the contiguous run — insertion
+        # stays a constant number of device ops per prompt, not per block
+        k, v = fetch(first_new * self.bs,
+                     (first_new + len(slots)) * self.bs)
+        self.store.write(slots, k, v)
+        for j, slot in enumerate(slots):
+            i = first_new + j
+            key = tuple(int(t) for t in tokens[i * self.bs:
+                                               (i + 1) * self.bs])
+            self.pool.retain(blocks[i])
+            child = _Node(tokens=key, block=blocks[i], slot=slot,
+                          parent=node,
+                          chain_hash=_chain_hash(node.chain_hash, key),
+                          last_used=now)
+            node.children[key] = child
+            node = child
+            self._nodes += 1
+        self.stats.inserted_blocks += len(slots)
+        return len(slots)
+
+    # ------------------------------------------------------------ evict
+    def _evictable_leaves(self) -> List[_Node]:
+        out = []
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if not n.children and not n.pinned \
+                    and self.pool.refcount(n.block) == 1:
+                out.append(n)
+        return out
+
+    def evictable_blocks(self) -> int:
+        """Blocks a cascading eviction could free right now: cached
+        blocks referenced ONLY by the cache (a node with refcount 1 can
+        have no in-flight descendant — any sequence using a descendant
+        holds references on the whole chain) and not pinned."""
+        count = 0
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            count += (not n.pinned
+                      and self.pool.refcount(n.block) == 1)
+        return count
+
+    def evict(self, n_blocks: int) -> int:
+        """Free up to ``n_blocks`` cached blocks, LRU-first over
+        evictable leaves, cascading to parents as they become leaves.
+        Never touches in-flight (pool refcount > 1) or pinned entries.
+        Returns the number of blocks actually freed."""
+        freed = 0
+        while freed < n_blocks:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_used)
+            self._drop(victim)
+            freed += 1
+        self.stats.evicted_blocks += freed
+        if self.meter is not None:
+            self.meter.cache_evictions += freed
+        return freed
+
+    def _drop(self, node: _Node) -> None:
+        assert not node.children
+        del node.parent.children[node.tokens]
+        self.pool.release(node.block)
+        assert self.pool.refcount(node.block) == 0, \
+            "evicted an in-flight block"
+        self.store.free_slot(node.slot)
+        self._nodes -= 1
+
+    def clear(self) -> int:
+        """Release every evictable entry (tests / shutdown).  Entries
+        still adopted by live sequences survive."""
+        return self.evict(self._nodes)
+
+    # -------------------------------------------------------------- pin
+    def pin(self, tokens: Sequence[int]) -> int:
+        """Pin the cached chain matching ``tokens`` (e.g. a shared system
+        template) so eviction never reclaims it.  Returns the number of
+        blocks pinned."""
+        chain = self._walk(tokens)
+        for n in chain:
+            n.pinned = True
+        return len(chain)
+
+    def unpin(self, tokens: Sequence[int]) -> int:
+        chain = self._walk(tokens)
+        for n in chain:
+            n.pinned = False
+        return len(chain)

@@ -41,6 +41,19 @@ freed, request requeued for recompute).  Per-request rollback on rejected
 speculation is an O(1) row truncate plus a block-table restore that frees
 the orphaned blocks.
 
+Admission is also *cached-prefix-aware* (serving/prefix_cache.py): each
+engine pool carries a radix-tree prefix cache, and a prompt whose
+block-aligned prefix is cached adopts the shared refcounted blocks, seeds
+its row's KV from the cache's page store in one dispatch, and prefills
+only the suffix (per-row cached-length offsets in the batched prefill).
+Freshly prefilled prompt blocks are inserted back, so best-of-N samples,
+shared templates and preempted-then-readmitted requests (whose prompt
+blocks survive in the cache) all skip repeated prefill; a queued request
+whose prefix an in-round admission is about to insert defers one tick
+and admits against the cache instead of duplicating the work.  Under
+pool pressure idle cached blocks are evicted LRU-first — before an
+admission is declared blocked and before a live request is preempted.
+
 Per-request greedy-token equivalence with the sequential regime is tested
 in tests/test_serving.py (same tokens, same steps, same answers)."""
 
@@ -65,6 +78,7 @@ from .batch_engine import BatchEngine, RowSnapshot
 from .kv_manager import KVManager
 from .paged_kv import (BlockTableSnapshot, PagedKVPool, PagedSeq,
                        PoolExhausted)
+from .prefix_cache import PrefixKVStore, RadixCache
 from .spec_engine import BatchSpecEngine, SpecLedger, SpecRow
 
 
@@ -81,6 +95,11 @@ class Request:
     # ("blocked: need N..., have M...") or preemption — surfaced instead of
     # an opaque None
     blocked_reason: Optional[str] = None
+    # radix prefix cache: prompt length and how many of its tokens were
+    # restored from shared cached blocks instead of prefilled (set at
+    # admission; a preempted request's counters reflect its LAST admission)
+    prompt_tokens: int = 0
+    cache_hit_tokens: int = 0
 
     @property
     def e2e_latency(self) -> Optional[float]:
@@ -216,6 +235,10 @@ class _SchedulerLedger(SpecLedger):
         a = self.acts[i]
         if a.alive:
             seq = a.base_seq if which == "base" else a.small_seq
+            # the CoW copy list a shared-tail truncate emits is dropped:
+            # the batched rows are dense (the pools are accounting +
+            # prefix-cache identity), so there is no physical page to
+            # copy — the row's own cache slots already hold the data
             seq.truncate(length)
 
 
@@ -226,7 +249,9 @@ class ContinuousScheduler:
                  max_batch: int = 8, context_capacity: int = 256,
                  engine_capacity: Optional[int] = None,
                  spec_decode: Optional[bool] = None,
-                 gamma: Optional[int] = None):
+                 gamma: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 cache_blocks: Optional[int] = None):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -264,6 +289,25 @@ class ContinuousScheduler:
             "small": PagedKVPool(max(kv.capacity_blocks("small"), 1),
                                  kv.block_size),
         }
+        # Radix prefix cache per engine: shared prompt prefixes (templates,
+        # best-of-N samples, preempted-and-readmitted requests) resolve to
+        # shared refcounted pool blocks whose KV seeds the row instead of
+        # being prefilled.  ``cache_blocks`` caps the physical page store
+        # (cached pages are a secondary copy; dense rows stay the working
+        # copies) — defaults to KVManager.prefix_cache_blocks.
+        self.caches: Optional[Dict[str, RadixCache]] = None
+        if prefix_cache:
+            self.caches = {}
+            for which, be in (("base", self.base_be),
+                              ("small", self.small_be)):
+                ll, kh, hd = be.kv_dims()
+                slots = cache_blocks if cache_blocks is not None \
+                    else kv.prefix_cache_blocks(which)
+                slots = max(1, min(slots, self.pools[which].num_blocks))
+                store = PrefixKVStore(slots, ll, kh, hd, kv.block_size,
+                                      dtype=be.state.k.dtype)
+                self.caches[which] = RadixCache(self.pools[which], store,
+                                                meter=be.meter)
         self.queue: Deque[Request] = deque()
         self.active: List[_Active] = []
         self.done: List[Request] = []
@@ -298,13 +342,51 @@ class ContinuousScheduler:
         return (prompt_len + cfg.token_budget + 2 * seg.max_step_tokens
                 + cfg.answer_max_tokens + 2 + 32 + spec_slack)
 
+    def _common_block_prefix(self, p: List[int], q: List[int]) -> int:
+        """Longest block-aligned common prefix of two prompts that the
+        cache could serve ``p`` from after ``q`` is inserted: whole
+        equal blocks only, capped at ``p``'s cacheable length."""
+        bs = self.kv.block_size
+        limit = min(self._cacheable_len(len(p)),
+                    (len(q) // bs) * bs)
+        n = 0
+        while n + bs <= limit and p[n:n + bs] == q[n:n + bs]:
+            n += bs
+        return n
+
+    def _cacheable_len(self, prompt_len: int) -> int:
+        """Longest prefix of a prompt the radix cache could ever serve:
+        whole blocks only, and never the entire prompt (the match rule
+        leaves >= 1 token to prefill so the suffix refreshes the row's
+        last_logits)."""
+        nb = prompt_len // self.kv.block_size
+        if nb * self.kv.block_size == prompt_len:
+            nb -= 1
+        return max(nb, 0) * self.kv.block_size
+
     def _admit(self, key: jax.Array) -> None:
         admitted: List[_Active] = []
         prompts: List[List[int]] = []
-        while self.queue:
+        suffixes: List[List[int]] = []
+        # prompts THIS admission round will newly insert blocks for
+        # (wait-for-prefix: a queued request whose cacheable prefix one
+        # of these inserts will EXTEND defers one tick and admits
+        # against the cache instead of duplicating the prefill — the
+        # best-of-N admission pattern.  Keyed on actual block overlap,
+        # not just a shared root: a template-family request whose shared
+        # prefix is already cached must NOT wait on a sibling whose
+        # pending insert only adds that sibling's unique suffix)
+        fresh_prompts: List[List[int]] = []
+        # per-engine (rows, slot_lists) whose cached prefixes import in
+        # one batched dispatch after the admission loop
+        loads: Dict[str, Tuple[List[int], List[List[int]]]] = {
+            "base": ([], []), "small": ([], [])}
+        bs = self.kv.block_size
+        idx = 0
+        while idx < len(self.queue):
             if not (self.base_be.free_rows and self.small_be.free_rows):
                 break
-            req = self.queue[0]
+            req = self.queue[idx]
             prompt = question_tokens(req.task)
             # a request whose worst-case context cannot fit an engine row
             # is refused HERE with a clear error, not with a mid-serve
@@ -316,13 +398,35 @@ class ContinuousScheduler:
                     f"worst-case context {worst} tokens exceeds the "
                     f"engine capacity {self.base_be.capacity}; raise "
                     f"engine_capacity or lower the token budget")
+            # ---- prefix-cache resolution (common block-aligned hit
+            # across the two engines, so one suffix list drives both
+            # prefills) ----
+            cached = 0
+            cacheable = self._cacheable_len(len(prompt))
+            if self.caches is not None and cacheable:
+                cached = min(c.peek(prompt) for c in self.caches.values())
+                if cached < cacheable and any(
+                        self._common_block_prefix(prompt, q) > cached
+                        for q in fresh_prompts):
+                    # blocks beyond this prompt's current hit land in
+                    # the cache when this round's prefill completes —
+                    # skip this request for now (later arrivals with
+                    # other prefixes may still admit this tick) and
+                    # admit it as a deeper hit next tick
+                    req.blocked_reason = ("deferred: waiting for shared "
+                                          "prefix insert")
+                    idx += 1
+                    continue
             need = self.pools["base"].blocks_for_tokens(len(prompt)) \
-                + self._headroom_blocks()
+                - cached // bs + self._headroom_blocks()
             # each pool must cover at least one context_capacity-sized
             # allotment (the admission-reservation unit), or no request
             # could ever run to completion without self-exhausting
+            # (cache-independent: the cached prefix can be evicted away)
             min_blocks = max(
-                need, self.pools["base"].blocks_for_tokens(
+                self.pools["base"].blocks_for_tokens(len(prompt))
+                + self._headroom_blocks(),
+                self.pools["base"].blocks_for_tokens(
                     min(self.context_capacity, worst)))
             too_big = [w for w in ("base", "small")
                        if min_blocks > self.pools[w].num_blocks]
@@ -333,15 +437,6 @@ class ContinuousScheduler:
                     f"{[self.pools[w].num_blocks for w in too_big]}; "
                     f"provision a larger KV budget or lower "
                     f"context_capacity")
-            short = [w for w in ("base", "small")
-                     if self.pools[w].num_free < need]
-            if short:
-                req.blocked_reason = "; ".join(
-                    f"blocked: need {need} {w} blocks, have "
-                    f"{self.pools[w].num_free}" for w in short)
-                break
-            self.queue.popleft()
-            req.blocked_reason = None
             if req.key is None:
                 key, req.key = jax.random.split(key)
             st = SpecReasonStepState(key=req.key)
@@ -351,16 +446,93 @@ class ContinuousScheduler:
                         small_row=self.small_be.alloc_row(),
                         base_seq=PagedSeq(self.pools["base"]),
                         small_seq=PagedSeq(self.pools["small"]))
-            a.base_seq.append(len(prompt))
-            a.small_seq.append(len(prompt))
+            chain_slots: Dict[str, List[int]] = {}
+            if cached:
+                # adopt the shared chain BEFORE any eviction below: the
+                # adopted blocks are refcount >= 2 (cache + sequence), so
+                # pressure eviction can reclaim idle entries but never
+                # clip the very chain this admission is built on
+                for which, seq in (("base", a.base_seq),
+                                   ("small", a.small_seq)):
+                    blocks, slots = self.caches[which].acquire(prompt,
+                                                               cached)
+                    seq.adopt(blocks, cached)
+                    chain_slots[which] = slots
+            short = []
+            for w in ("base", "small"):
+                if self.pools[w].num_free < need and self.caches:
+                    # cached-but-idle blocks are reclaimable capacity:
+                    # evict LRU-first before declaring the pool short
+                    self.caches[w].evict(need - self.pools[w].num_free)
+                if self.pools[w].num_free < need:
+                    short.append(w)
+            if short:
+                a.base_seq.free()
+                a.small_seq.free()
+                self.base_be.free_row(a.base_row)
+                self.small_be.free_row(a.small_row)
+                req.blocked_reason = "; ".join(
+                    f"blocked: need {need} {w} blocks, have "
+                    f"{self.pools[w].num_free}" for w in short)
+                break
+            del self.queue[idx]
+            req.blocked_reason = None
+            if self.caches is not None:
+                # cache-oriented per-request counters (summarize's hit
+                # rate, the serve CLI's cache[hit=..] line); left zero
+                # when the cache is disabled so reporting stays silent
+                req.prompt_tokens = len(prompt)
+                req.cache_hit_tokens = cached
+            if self.caches is not None:
+                for which, cache in self.caches.items():
+                    cache.record(len(prompt), cached)
+                if cached:
+                    # queue the row seeds: the whole round's hits import
+                    # in ONE batched dispatch per engine below
+                    loads["base"][0].append(a.base_row)
+                    loads["base"][1].append(chain_slots["base"])
+                    loads["small"][0].append(a.small_row)
+                    loads["small"][1].append(chain_slots["small"])
+            a.base_seq.append(len(prompt) - cached)
+            a.small_seq.append(len(prompt) - cached)
+            if self.caches is not None and cached < cacheable:
+                fresh_prompts.append(prompt)
             admitted.append(a)
             prompts.append(prompt)
+            suffixes.append(prompt[cached:])
         if admitted:
+            for which, be in (("base", self.base_be),
+                              ("small", self.small_be)):
+                rows, slot_lists = loads[which]
+                if rows:
+                    store = self.caches[which].store
+                    be.load_prefix_pages_rows(rows, store.k_pages,
+                                              store.v_pages, slot_lists)
             # batched prompt prefill: all newly admitted requests land in
-            # one length-bucketed call per engine
-            self.base_be.extend_rows([a.base_row for a in admitted], prompts)
+            # one length-bucketed call per engine, each row starting at
+            # its own cached-prefix offset
+            self.base_be.extend_rows([a.base_row for a in admitted],
+                                     suffixes)
             self.small_be.extend_rows([a.small_row for a in admitted],
-                                      prompts)
+                                      suffixes)
+            if self.caches is not None:
+                # cache every full prompt block not already cached: the
+                # cache retains the sequence's blocks (shared from here
+                # on) and copies their KV out of the freshly
+                # prefilled rows
+                for a, prompt in zip(admitted, prompts):
+                    nb_full = len(prompt) // bs
+                    if not nb_full:
+                        continue
+                    for cache, be, seq, row in (
+                            (self.caches["base"], self.base_be,
+                             a.base_seq, a.base_row),
+                            (self.caches["small"], self.small_be,
+                             a.small_seq, a.small_row)):
+                        cache.insert(
+                            prompt[:nb_full * bs], seq.blocks[:nb_full],
+                            lambda t0, t1, be=be, row=row:
+                                be.export_prefix(row, t0, t1))
             for a in admitted:
                 a.state.phase = self.controller.think_phase(a.state)
                 self.active.append(a)
@@ -379,6 +551,12 @@ class ContinuousScheduler:
                 seq.append(n_tokens)
                 return
             except PoolExhausted:
+                # cheapest relief first: evict idle cached prefixes (the
+                # cache's references are the only thing keeping them) and
+                # retry before sacrificing a live request
+                if self.caches is not None and self.caches[which].evict(
+                        self.pools[which].blocks_for_tokens(n_tokens) + 1):
+                    continue
                 victim = next((v for v in reversed(self.active)
                                if v is not a and v.alive), None)
                 if victim is None:
@@ -640,3 +818,19 @@ class ContinuousScheduler:
     # ------------------------------------------------------------- stats
     def pool_utilization(self) -> Dict[str, float]:
         return {w: p.num_used / p.num_blocks for w, p in self.pools.items()}
+
+    def cache_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-engine radix prefix-cache counters (empty when the cache
+        is disabled)."""
+        if self.caches is None:
+            return {}
+        return {w: c.stats.as_dict() for w, c in self.caches.items()}
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every idle cached prefix (entries adopted by live
+        sequences survive); returns the number of blocks freed.  After a
+        full drain this returns the pools to empty — the cache's
+        references are the only ones left."""
+        if self.caches is None:
+            return 0
+        return sum(c.clear() for c in self.caches.values())

@@ -75,7 +75,16 @@ class SpecLedger:
     ``grow``/``truncate`` report the *base*/"draft" context length changes
     as they happen — including the transient gamma in-flight draft tokens
     a verification pass writes; ``grow`` may preempt rows (pool pressure),
-    which the engine observes through ``alive``."""
+    which the engine observes through ``alive``.
+
+    Shared-prefix contract: with the radix prefix cache on, a row's block
+    table may hold blocks shared with the cache (and with the other
+    best-of-N samples of the same prompt).  A ``truncate`` landing inside
+    such a block copy-on-writes the kept partial tail
+    (``PagedSeq.truncate`` emits the ``(src, dst)`` page copy), so the
+    spec rollback never leaves a row with writable claim on slots its
+    co-owners read; a ledger over dense rows drops the copy list (there
+    is no physical page to copy), a fully-paged ledger must apply it."""
 
     def alive(self, i: int) -> bool:
         return True

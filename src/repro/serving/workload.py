@@ -1,16 +1,22 @@
 """Workload driving for the serving benchmarks and the serve CLI: Poisson
-(or burst) arrivals pumped through either scheduler regime, plus summary
-statistics (req/s, tok/s, latency percentiles)."""
+(or burst) arrivals pumped through either scheduler regime, best-of-N /
+self-consistency expansion (N sampled reasoning chains per prompt, a
+majority vote over their answers — the workload the radix prefix cache
+makes cheap: all N samples share one prompt's cached blocks), shared-
+template task families, plus summary statistics (req/s, tok/s, latency
+percentiles, prefix-cache hit rate)."""
 
 from __future__ import annotations
 
+import dataclasses
 import random
 import time
+from collections import Counter
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 
-from ..data.tasks import Task
+from ..data.tasks import Task, sample_task
 from .scheduler import ContinuousScheduler, Request, Scheduler
 
 
@@ -71,6 +77,70 @@ def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
                     f"scheduler stalled: {blocked or 'unknown reason'}")
 
 
+def expand_best_of_n(pairs: Sequence[Tuple[Task, jax.Array]],
+                     n: int) -> List[Tuple[Task, jax.Array]]:
+    """Self-consistency expansion: each (task, key) becomes ``n``
+    requests with per-sample keys folded from the task's key.  The ``n``
+    samples of one task are adjacent in the returned list (and therefore
+    in arrival order), which is what lets the scheduler's wait-for-prefix
+    admission turn them into one cold prefill plus n-1 cache hits."""
+    if n < 1:
+        raise ValueError("best-of-N needs n >= 1")
+    return [(task, jax.random.fold_in(key, j))
+            for task, key in pairs for j in range(n)]
+
+
+@dataclasses.dataclass
+class VoteResult:
+    """Majority vote over one task's N sampled answers."""
+    task: Task
+    samples: List[Request]
+    winner_ids: List[int]              # the most-voted answer token ids
+    counts: Dict[Tuple[int, ...], int]
+
+    @property
+    def n(self) -> int:
+        return len(self.samples)
+
+    @property
+    def agreement(self) -> float:
+        """Fraction of samples that voted for the winner."""
+        return self.counts[tuple(self.winner_ids)] / max(self.n, 1)
+
+
+def majority_vote(handles: Sequence[Request], n: int) -> List[VoteResult]:
+    """Group ``expand_best_of_n``-ordered request handles back into their
+    tasks and majority-vote each group's answer token sequences (ties
+    break toward the earliest sample — the deterministic rule)."""
+    assert len(handles) % n == 0, (len(handles), n)
+    out = []
+    for i in range(0, len(handles), n):
+        group = list(handles[i:i + n])
+        answers = [tuple(h.result.answer_ids) for h in group
+                   if h.result is not None]
+        counts = Counter(answers)
+        winner = max(answers, key=lambda a: (counts[a], -answers.index(a)))
+        out.append(VoteResult(task=group[0].task, samples=group,
+                              winner_ids=list(winner), counts=dict(counts)))
+    return out
+
+
+def template_task_family(rng: random.Random, n: int, shared_ops: int = 8,
+                         extra_min: int = 1, extra_max: int = 3
+                         ) -> List[Task]:
+    """``n`` tasks sharing one op-chain prefix — the "requests share a
+    prompt template" arrival mix: their question token prefixes agree for
+    ``5 + 4 * shared_ops`` tokens (see data.tasks.question_tokens), so a
+    radix prefix cache serves every request after the first from shared
+    blocks."""
+    proto = sample_task(rng, min_steps=shared_ops, max_steps=shared_ops)
+    out = []
+    for _ in range(n):
+        tail = sample_task(rng, min_steps=extra_min, max_steps=extra_max)
+        out.append(Task(start=proto.start, ops=proto.ops + tail.ops))
+    return out
+
+
 def percentile(sorted_vals: List[float], p: float) -> float:
     if not sorted_vals:
         return 0.0
@@ -103,4 +173,17 @@ def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
             sum(s.acceptance_rate for s in spec) / len(spec), 4)
         out["spec_mean_accepted_len"] = round(
             sum(s.mean_accepted_len for s in spec) / len(spec), 4)
+    # radix prefix cache: aggregate prompt-token hit rate over the
+    # requests' LAST admissions, plus the engine-side eviction totals
+    # (monotone counters — take the max across the per-finish meter
+    # snapshots the results carry)
+    prompt_toks = sum(h.prompt_tokens for h in handles)
+    if prompt_toks:
+        hit_toks = sum(h.cache_hit_tokens for h in handles)
+        out["cache_hit_tokens"] = hit_toks
+        out["cache_hit_rate"] = round(hit_toks / prompt_toks, 4)
+        out["cache_evictions"] = max(
+            (int(sum(m.get("cache_evictions", 0)
+                     for m in h.result.meters.values()))
+             for h in handles if h.result is not None), default=0)
     return out

@@ -82,9 +82,10 @@ def test_truncate_releases_orphaned_suffix_blocks():
     seq.append(6)                      # 2 blocks, tail half full
     seq.append(9)                      # gamma in-flight: 15 tokens, 4 blk
     assert len(seq.blocks) == 4
-    freed = seq.truncate(7)            # keep accepted prefix
+    freed, copies = seq.truncate(7)    # keep accepted prefix
     assert seq.length == 7 and len(seq.blocks) == 2
     assert len(freed) == 2 and pool.num_used == 2
+    assert not copies                  # unshared tail: no CoW needed
     with pytest.raises(ValueError):
         seq.truncate(8)                # cannot truncate upward
     # a snapshot-shared tail survives truncation with its refcount intact

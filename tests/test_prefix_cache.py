@@ -1,0 +1,513 @@
+"""Radix-tree prefix cache: trie/eviction accounting over the paged
+pool, truncate copy-on-write over shared blocks, cached-prefill
+bit-identity at the batch-engine level, and end-to-end token-identity of
+cache-on vs cache-off serving (greedy, sampled, spec-decode, and
+preemption-restore-via-cache)."""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.batch_engine import BatchEngine
+from repro.serving.engine import Engine, Meter
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.paged_kv import PagedKVPool, PagedSeq
+from repro.serving.prefix_cache import PrefixKVStore, RadixCache
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.workload import (expand_best_of_n, majority_vote,
+                                    template_task_family)
+from repro.tokenizer import toy as tk
+
+BS = 4          # small block size: multi-block prompts stay tiny
+
+
+def _mk_cache(num_blocks=16, slots=8, meter=None):
+    pool = PagedKVPool(num_blocks=num_blocks, block_size=BS)
+    store = PrefixKVStore(slots, n_layers=1, kv_heads=1, head_dim=2,
+                          block_size=BS)
+    return pool, store, RadixCache(pool, store, meter=meter)
+
+
+def _kv_for(tokens):
+    """Deterministic token-dependent KV so store roundtrips are checkable:
+    (L=1, n, kv=1, hd=2) filled with the token value."""
+    n = len(tokens)
+    arr = jnp.asarray(tokens, jnp.float32).reshape(1, n, 1, 1)
+    return jnp.broadcast_to(arr, (1, n, 1, 2)), \
+        -jnp.broadcast_to(arr, (1, n, 1, 2))
+
+
+def _seq_with(pool, tokens):
+    seq = PagedSeq(pool)
+    seq.append(len(tokens))
+    return seq
+
+
+def _insert(cache, pool, tokens):
+    """Prefill-then-insert as the scheduler does: a fresh seq owns the
+    prompt's blocks, the cache retains the full ones."""
+    seq = _seq_with(pool, tokens)
+    nb = len(tokens) // BS
+    cache.insert(tokens[:nb * BS], seq.blocks[:nb],
+                 lambda t0, t1: _kv_for(tokens[t0:t1]))
+    return seq
+
+
+# ------------------------------------------------------------- radix tree
+
+
+def test_match_is_block_aligned_and_never_whole_prompt():
+    pool, store, cache = _mk_cache()
+    toks = list(range(10))              # 2 full blocks + partial
+    seq = _insert(cache, pool, toks)
+    assert cache.cached_blocks == 2
+    # full two-block hit for a longer prompt sharing the prefix
+    blocks, slots, hit = cache.match(toks + [99])
+    assert hit == 8 and blocks == seq.blocks[:2]
+    # divergence after one block matches one block
+    _, _, hit = cache.match(toks[:4] + [77, 77, 77, 77, 77])
+    assert hit == 4
+    # a lookup of EXACTLY the cached span drops its last block: at least
+    # one token must remain to prefill
+    _, _, hit = cache.match(toks[:8])
+    assert hit == 4
+    # sub-block prompts can never hit
+    assert cache.match([0, 1])[2] == 0
+    assert cache.stats.lookups == 4 and cache.stats.hits == 3
+
+
+def test_insert_dedups_and_counts():
+    pool, store, cache = _mk_cache()
+    toks = list(range(8))
+    s1 = _insert(cache, pool, toks)
+    used_before = pool.num_used
+    s2 = _insert(cache, pool, toks)     # same prompt again: nothing new
+    assert cache.cached_blocks == 2
+    assert cache.stats.inserted_blocks == 2
+    # the duplicate insert retained nothing extra
+    for b in s1.blocks:
+        assert pool.refcount(b) == 2    # s1 + cache
+    for b in s2.blocks:
+        assert pool.refcount(b) == 1    # s2 only (its copy is uncached)
+    assert pool.num_used == used_before + 2
+
+
+def test_adopt_shares_and_free_keeps_cache_alive():
+    pool, store, cache = _mk_cache()
+    toks = list(range(12))
+    owner = _insert(cache, pool, toks)
+    blocks, slots, hit = cache.match(toks + [50])
+    reader = PagedSeq(pool)
+    reader.adopt(blocks, hit)
+    for b in blocks:
+        assert pool.refcount(b) == 3    # owner + cache + reader
+    owner.free()
+    reader.free()
+    for b in blocks:
+        assert pool.refcount(b) == 1    # cache keeps the prefix alive
+    # store roundtrip: the cached pages hold the exporter's KV
+    k, v = store.read(slots)
+    np.testing.assert_array_equal(np.asarray(k),
+                                  np.asarray(_kv_for(toks[:hit])[0]))
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.asarray(_kv_for(toks[:hit])[1]))
+
+
+def test_eviction_lru_cascades_and_spares_inflight_and_pinned():
+    pool, store, cache = _mk_cache(num_blocks=32, slots=16)
+    a = list(range(8))                  # chain A: 2 blocks
+    b = list(range(8, 20))              # chain B: 3 blocks
+    sa = _insert(cache, pool, a)
+    sb = _insert(cache, pool, b)
+    sa.free()
+    sb.free()
+    assert cache.cached_blocks == 5
+    assert cache.evictable_blocks() == 5
+    # touch A: B becomes LRU
+    cache.match(a + [99])
+    assert cache.evict(1) == 1          # B's leaf (deepest, LRU) goes
+    assert cache.cached_blocks == 4
+    # in-flight chains are untouchable: adopt A, then over-evict
+    blocks, _, hit = cache.match(a + [99])
+    reader = PagedSeq(pool)
+    reader.adopt(blocks, hit)
+    assert cache.evict(100) == 2        # only B's remaining cascade
+    assert cache.cached_blocks == 2
+    assert cache.evictable_blocks() == 0
+    reader.free()
+    # pinned chains survive over-eviction too
+    assert cache.pin(a) == 2
+    assert cache.evict(100) == 0
+    cache.unpin(a)
+    assert cache.evict(100) == 2
+    assert cache.cached_blocks == 0 and pool.num_used == 0
+
+
+def test_insert_under_slot_pressure_evicts_lru():
+    pool, store, cache = _mk_cache(num_blocks=32, slots=2)
+    a, b = list(range(8)), list(range(8, 16))
+    _insert(cache, pool, a).free()
+    assert store.free_slots == 0
+    _insert(cache, pool, b).free()      # must displace A's LRU entries
+    assert cache.cached_blocks == 2
+    assert cache.match(b + [99])[2] == 8
+    assert cache.match(a + [99])[2] == 0
+    assert cache.stats.evicted_blocks == 2
+
+
+def test_insert_never_evicts_inflight_when_slots_full():
+    pool, store, cache = _mk_cache(num_blocks=32, slots=2)
+    a = list(range(8))
+    owner = _insert(cache, pool, a)     # owner stays live: refcount 2
+    before = [pool.refcount(bk) for bk in owner.blocks]
+    _insert(cache, pool, list(range(8, 24))).free()
+    # nothing of the in-flight chain was evicted, and the new chain got
+    # no slots (insert degrades to not-caching, never to corruption)
+    assert [pool.refcount(bk) for bk in owner.blocks] == before
+    assert cache.cached_blocks == 2
+    assert cache.match(a + [99])[2] == 8
+
+
+def test_insert_never_evicts_its_own_attach_point():
+    """Regression: with the store full and the insert's matched prefix
+    the only evictable entry (the caches of the two engines can diverge,
+    so the inserter need not have adopted it), slot-pressure eviction
+    must NOT reclaim the attach point — new nodes would hang off a
+    detached subtree, leaking their pool blocks forever.  The insert
+    degrades to not-caching the extension instead."""
+    pool, store, cache = _mk_cache(num_blocks=16, slots=1)
+    a = list(range(4))                  # one block, fills the only slot
+    _insert(cache, pool, a).free()
+    assert store.free_slots == 0 and pool.refcount(cache.match(
+        a + [9])[0][0]) == 1            # cache-only: evictable in general
+    ext = a + list(range(4, 8))         # extends the cached chain
+    seq = _seq_with(pool, ext)
+    inserted = cache.insert(ext, seq.blocks,
+                            lambda t0, t1: _kv_for(ext[t0:t1]))
+    assert inserted == 0                # no slot without self-eviction
+    assert cache.cached_blocks == 1
+    assert cache.match(a + [9])[2] == 4  # chain A intact, not detached
+    seq.free()
+    assert cache.evict(10) == 1 and pool.num_used == 0   # nothing leaked
+
+
+def test_common_block_prefix_rule(engine_pair):
+    """The wait-for-prefix deferral keys on actual block overlap with a
+    pending insert, capped at the candidate's cacheable length — not on
+    a shared first block."""
+    base, small = engine_pair
+    ctrl = SpecReason(base, small, SpecReasonConfig())
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    cs = ContinuousScheduler(ctrl, kv, max_batch=2, context_capacity=128)
+    bs = kv.block_size
+    p = list(range(100, 100 + 2 * bs + 3))       # cacheable: 2 blocks
+    same = list(p)
+    sib = p[:bs] + [7] * (2 * bs)                # diverges after block 1
+    other = [9] * len(p)
+    assert cs._common_block_prefix(p, same) == 2 * bs
+    assert cs._common_block_prefix(p, sib) == bs
+    assert cs._common_block_prefix(p, other) == 0
+    # capped by the candidate's cacheable length (whole prompt never)
+    aligned = p[:2 * bs]
+    assert cs._common_block_prefix(aligned, same) == bs
+
+
+def test_meter_attribution():
+    meter = Meter()
+    pool, store, cache = _mk_cache(meter=meter)
+    toks = list(range(8))
+    _insert(cache, pool, toks).free()
+    cache.match(toks + [99])
+    assert meter.cache_hit_tokens == 8
+    assert meter.cache_lookup_tokens == 9
+    cache.evict(10)
+    assert meter.cache_evictions == 2
+    assert meter.cache_hit_rate == 8 / 9
+    d = meter.as_dict()
+    assert d["cache_hit_tokens"] == 8 and d["cache_evictions"] == 2
+
+
+# ------------------------------------------- truncate CoW (regression)
+
+
+def test_truncate_cow_detaches_shared_tail():
+    """Satellite regression: a spec-decode rollback that truncates INTO a
+    shared (cached) block must detach the kept partial tail onto a fresh
+    block (emitting the physical copy) instead of keeping writable claim
+    on — or freeing — the co-owned block."""
+    pool, store, cache = _mk_cache()
+    toks = list(range(8))
+    owner = _insert(cache, pool, toks)  # blocks shared with the cache
+    shared = list(owner.blocks)
+    # speculative growth past the cached prefix, then a rollback landing
+    # INSIDE the second cached block (committed prefix mid-block)
+    owner.append(6)                     # 14 tokens, in-flight draft
+    freed, copies = owner.truncate(6)
+    assert owner.length == 6
+    # the suffix blocks past the kept length were released
+    assert pool.refcount(shared[1]) >= 1
+    # the kept partial tail detached via CoW: a (src, dst) physical copy
+    assert copies and copies[0][0] == shared[1]
+    assert owner.blocks[1] != shared[1]
+    assert pool.refcount(owner.blocks[1]) == 1    # exclusively owned now
+    assert pool.refcount(shared[1]) == 1          # cache's view intact
+    # the cache still serves the ORIGINAL chain
+    blocks, _, hit = cache.match(toks + [99])
+    assert hit == 8 and blocks == shared
+    owner.free()
+    assert cache.evict(10) == 2 and pool.num_used == 0
+
+
+def test_truncate_block_boundary_keeps_shared_blocks():
+    """Truncating exactly AT a block boundary keeps shared blocks shared
+    (no CoW needed: the sequence holds no partial claim)."""
+    pool, store, cache = _mk_cache()
+    toks = list(range(8))
+    owner = _insert(cache, pool, toks)
+    shared = list(owner.blocks)
+    owner.append(5)
+    freed, copies = owner.truncate(8)
+    assert not copies and owner.blocks == shared
+    assert pool.refcount(owner.blocks[1]) == 2    # owner + cache
+
+
+def test_truncate_cow_skipped_when_pool_full():
+    """When the pool cannot supply a CoW block the truncate keeps the
+    shared tail (the documented degraded mode: the next append CoWs)."""
+    pool = PagedKVPool(num_blocks=2, block_size=BS)
+    seq = PagedSeq(pool)
+    seq.append(8)
+    snap = seq.snapshot()               # shares both blocks
+    freed, copies = seq.truncate(6)     # mid-block, tail shared, pool full
+    assert not copies and seq.blocks[-1] == snap.blocks[-1]
+    seq.restore(snap)
+
+
+# ------------------------------------- batch-engine cached-prefill paths
+
+
+ECFG = ModelConfig(name="pc", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_size=tk.VOCAB_SIZE).validate()
+
+
+@pytest.fixture(scope="module")
+def bengine():
+    m = Model(ECFG)
+    return BatchEngine(m, m.init(jax.random.PRNGKey(0)), batch=4,
+                       capacity=128)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_cached_prefill_bit_identical_to_cold(bengine, temperature):
+    """The acceptance bar at the engine level: a row seeded from exported
+    prefix KV and prefilled only on its suffix is BIT-identical — logits
+    and generated tokens, greedy and sampled — to a cold full-prompt
+    prefill."""
+    be = bengine
+    rng = np.random.RandomState(0)
+    prompt = [int(t) for t in rng.randint(1, 40, size=27)]
+    cold = be.alloc_row()
+    warm = be.alloc_row()
+    be.extend_rows([cold], [prompt])
+    # export the cold row's first block, stage it in a store, import
+    store = PrefixKVStore(4, *be.kv_dims(), block_size=16,
+                          dtype=be.state.k.dtype)
+    k, v = be.export_prefix(cold, 0, 16)
+    store.write([2], k, v)
+    be.load_prefix_pages(warm, store.k_pages, store.v_pages, [2])
+    assert be.pos[warm] == 16
+    lg = be.extend_rows([warm], [prompt[16:]], want_logits=True)
+    assert lg[0].shape[0] == len(prompt) - 16
+    np.testing.assert_array_equal(be.last_logits[cold],
+                                  be.last_logits[warm])
+    np.testing.assert_array_equal(np.asarray(be.state.k[:, cold, :27]),
+                                  np.asarray(be.state.k[:, warm, :27]))
+    sp = SamplingParams(temperature=temperature)
+    outs = be.generate_rows([cold, warm], 12, [tk.EOS], sp,
+                            [jax.random.PRNGKey(3)] * 2)
+    assert outs[0] == outs[1] and len(outs[0]) > 0
+    be.free_row(cold)
+    be.free_row(warm)
+
+
+def test_load_prefix_dense_matches_pages(bengine):
+    """The dense reference path (load_prefix) and the fused page path
+    (load_prefix_pages) seed identical rows."""
+    be = bengine
+    rng = np.random.RandomState(1)
+    prompt = [int(t) for t in rng.randint(1, 40, size=20)]
+    src = be.alloc_row()
+    be.extend_rows([src], [prompt])
+    k, v = be.export_prefix(src, 0, 16)
+    store = PrefixKVStore(2, *be.kv_dims(), block_size=16,
+                          dtype=be.state.k.dtype)
+    store.write([1], k, v)
+    a, b = be.alloc_row(), be.alloc_row()
+    be.load_prefix(a, k, v)
+    be.load_prefix_pages(b, store.k_pages, store.v_pages, [1])
+    assert be.pos[a] == be.pos[b] == 16
+    np.testing.assert_array_equal(np.asarray(be.state.k[:, a, :16]),
+                                  np.asarray(be.state.k[:, b, :16]))
+    np.testing.assert_array_equal(np.asarray(be.state.v[:, a, :16]),
+                                  np.asarray(be.state.v[:, b, :16]))
+    for r in (src, a, b):
+        be.free_row(r)
+
+
+# --------------------------------------------------- end-to-end serving
+
+
+BASE_CFG = ModelConfig(name="pb", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=tk.VOCAB_SIZE).validate()
+SMALL_CFG = ModelConfig(name="ps", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    return (Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256),
+            Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256))
+
+
+def _serve(engine_pair, pairs, prefix_cache, temperature=0.0,
+           use_spec_decode=False, kv_bytes=1 << 26, kv_fraction=0.8,
+           max_batch=4):
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(5.0), token_budget=48,
+                           max_steps=6, use_spec_decode=use_spec_decode,
+                           spec_gamma=3,
+                           sampling=SamplingParams(temperature=temperature))
+    ctrl = SpecReason(base, small, cfg)
+    kv = KVManager(BASE_CFG, SMALL_CFG,
+                   KVBudget(total_bytes=kv_bytes,
+                            base_fraction=kv_fraction))
+    cs = ContinuousScheduler(ctrl, kv, max_batch=max_batch,
+                             context_capacity=128,
+                             prefix_cache=prefix_cache)
+    handles = [cs.submit(t, key=k) for t, k in pairs]
+    cs.drain(jax.random.PRNGKey(9))
+    return handles, cs
+
+
+def _best_of_n_pairs(seed=0, n_tasks=2, n=3):
+    rng = random.Random(seed)
+    # min 3 ops: prompts must exceed one KV block (16 tokens) to be
+    # cacheable under the block-aligned match rule
+    base_pairs = [(tasks.sample_task(rng, min_steps=3),
+                   jax.random.PRNGKey(50 + i)) for i in range(n_tasks)]
+    return expand_best_of_n(base_pairs, n)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_best_of_n_cache_on_token_identical_to_off(engine_pair,
+                                                   temperature):
+    """The tentpole acceptance bar: with the radix cache enabled,
+    per-request outputs are token-identical to the cache-disabled path —
+    greedy AND sampled — on the best-of-N workload, with a nonzero
+    measured hit rate."""
+    pairs = _best_of_n_pairs(n=3)
+    off, _ = _serve(engine_pair, pairs, prefix_cache=False,
+                    temperature=temperature)
+    on, cs = _serve(engine_pair, pairs, prefix_cache=True,
+                    temperature=temperature)
+    for h_off, h_on in zip(off, on):
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+    # the N-1 later samples of each task hit the shared prompt blocks
+    assert sum(h.cache_hit_tokens for h in on) > 0
+    for w in ("base", "small"):
+        assert cs.cache_stats()[w]["hit_tokens"] > 0
+    # sampled runs diverge across samples (self-consistency needs
+    # diversity); greedy runs collapse to one chain per task
+    answers = {tuple(h.result.answer_ids) for h in on[:3]}
+    if temperature == 0.0:
+        assert len(answers) == 1
+
+
+def test_spec_decode_cache_on_token_identical(engine_pair):
+    """Hierarchical speculation over cached prefixes: spec-decode mode
+    with the cache on reproduces the cache-off outputs token for token
+    (the spec rollback path truncates over adopted shared blocks)."""
+    pairs = _best_of_n_pairs(seed=3, n_tasks=2, n=2)
+    off, _ = _serve(engine_pair, pairs, prefix_cache=False,
+                    use_spec_decode=True)
+    on, cs = _serve(engine_pair, pairs, prefix_cache=True,
+                    use_spec_decode=True)
+    for h_off, h_on in zip(off, on):
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+        assert h_on.result.spec_stats.rounds == \
+            h_off.result.spec_stats.rounds
+    assert sum(h.cache_hit_tokens for h in on) > 0
+
+
+def test_preemption_restore_via_cache_token_identical(engine_pair):
+    """A pool too small for the workload: preempted requests restore
+    their prompts from surviving cached blocks (or recompute when
+    eviction took them) — outputs stay identical to cache-off serving
+    and every block is accounted for."""
+    pairs = _best_of_n_pairs(seed=1, n_tasks=2, n=2)
+    off, cs_off = _serve(engine_pair, pairs, prefix_cache=False,
+                         kv_bytes=90_000, kv_fraction=0.5)
+    on, cs = _serve(engine_pair, pairs, prefix_cache=True,
+                    kv_bytes=90_000, kv_fraction=0.5)
+    assert len(cs.done) == len(pairs)
+    for h_off, h_on in zip(off, on):
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+    # every admission — initial or post-preemption readmission — records
+    # exactly one lookup, so the counters tie out against preemptions
+    stats = cs.cache_stats()
+    assert stats["base"]["lookups"] == len(pairs) + cs.preemptions
+    cs.clear_prefix_cache()
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
+
+
+def test_wait_for_prefix_defers_then_hits(engine_pair):
+    """Burst-submitted identical prompts: the first admission prefills
+    cold, the rest defer one tick and admit as cache hits — not as N
+    duplicate cold prefills."""
+    rng = random.Random(7)
+    task = tasks.sample_task(rng, min_steps=5, max_steps=5)  # long prompt
+    pairs = expand_best_of_n([(task, jax.random.PRNGKey(0))], 3)
+    on, cs = _serve(engine_pair, pairs, prefix_cache=True)
+    plen = len(tasks.question_tokens(task))
+    cacheable = (plen // cs.kv.block_size) * cs.kv.block_size
+    if cacheable == plen:
+        cacheable -= cs.kv.block_size
+    assert on[0].cache_hit_tokens == 0
+    for h in on[1:]:
+        assert h.cache_hit_tokens == cacheable > 0
+
+
+def test_vote_and_template_family_helpers():
+    rng = random.Random(0)
+    fam = template_task_family(rng, 4, shared_ops=6)
+    q0 = tasks.question_tokens(fam[0])
+    shared = 5 + 4 * 6
+    for t in fam[1:]:
+        q = tasks.question_tokens(t)
+        assert q[:shared] == q0[:shared] and q != q0
+    # majority vote: deterministic winner, earliest-sample tie-break
+    reqs = []
+    for ans in ([1, 2], [3, 4], [1, 2]):
+        r = type("H", (), {})()
+        r.task = fam[0]
+        r.result = type("R", (), {"answer_ids": ans})()
+        reqs.append(r)
+    votes = majority_vote(reqs, 3)
+    assert votes[0].winner_ids == [1, 2]
+    assert votes[0].agreement == 2 / 3

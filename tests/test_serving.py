@@ -105,7 +105,8 @@ def test_drain_surfaces_admission_block_reason(engine_pair):
 
 def _run_pair_workloads(engine_pair, n_requests=4, temperature=0.0,
                         threshold=5.0, seed=0, max_batch=4, kv_bytes=1 << 26,
-                        kv_fraction=0.8, context_capacity=128):
+                        kv_fraction=0.8, context_capacity=128,
+                        prefix_cache=True):
     """Run the same workload sequentially (controller.run) and through the
     continuous scheduler; return (sequential results, request handles,
     scheduler)."""
@@ -123,7 +124,8 @@ def _run_pair_workloads(engine_pair, n_requests=4, temperature=0.0,
                    KVBudget(total_bytes=kv_bytes,
                             base_fraction=kv_fraction))
     cs = ContinuousScheduler(ctrl, kv, max_batch=max_batch,
-                             context_capacity=context_capacity)
+                             context_capacity=context_capacity,
+                             prefix_cache=prefix_cache)
     handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
     cs.drain(jax.random.PRNGKey(9))
     return seq, handles, cs
@@ -144,7 +146,11 @@ def test_continuous_greedy_equivalent_to_sequential(engine_pair):
         for a, b in zip(r_cb.steps, r_seq.steps):
             assert (a.source, a.accepted, a.tokens) == \
                 (b.source, b.accepted, b.tokens)
-    # every row and block released
+    # after the drain only the prefix cache's references remain; clearing
+    # it returns every block to the pools
+    for w, pool in cs.pools.items():
+        assert pool.num_used == cs.caches[w].cached_blocks
+    cs.clear_prefix_cache()
     assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
     assert cs.base_be.free_rows == cs.base_be.batch
     assert cs.small_be.free_rows == cs.small_be.batch
@@ -163,11 +169,13 @@ def test_continuous_sampled_equivalent_to_sequential(engine_pair):
 def test_continuous_preemption_recovers(engine_pair):
     """A pool too small for the whole workload preempts (recompute-style:
     youngest victim loses its blocks and requeues) but still finishes
-    every request with the right outputs."""
+    every request with the right outputs.  Prefix cache off: this pins
+    the bare preemption path (cache-assisted restore has its own tests
+    in test_prefix_cache.py)."""
     # ~10 base blocks: two-ish requests fit at once
     seq, handles, cs = _run_pair_workloads(
         engine_pair, n_requests=4, kv_bytes=90_000, kv_fraction=0.5,
-        max_batch=4)
+        max_batch=4, prefix_cache=False)
     assert cs.preemptions > 0
     assert len(cs.done) == 4
     for r_seq, h in zip(seq, handles):
@@ -210,7 +218,8 @@ def test_continuous_rejects_unsupported_modes(engine_pair):
 def _run_spec_pair_workloads(engine_pair, n_requests=3, temperature=0.0,
                              threshold=5.0, seed=0, max_batch=4,
                              kv_bytes=1 << 26, kv_fraction=0.8,
-                             context_capacity=128, gamma=3):
+                             context_capacity=128, gamma=3,
+                             prefix_cache=True):
     """Same workload through the sequential controller WITH spec decode
     and the continuous scheduler in spec mode."""
     base, small = engine_pair
@@ -228,7 +237,8 @@ def _run_spec_pair_workloads(engine_pair, n_requests=3, temperature=0.0,
                    KVBudget(total_bytes=kv_bytes,
                             base_fraction=kv_fraction))
     cs = ContinuousScheduler(ctrl, kv, max_batch=max_batch,
-                             context_capacity=context_capacity)
+                             context_capacity=context_capacity,
+                             prefix_cache=prefix_cache)
     handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
     cs.drain(jax.random.PRNGKey(9))
     return seq, handles, cs
@@ -255,6 +265,7 @@ def test_continuous_spec_equivalent_to_sequential(engine_pair,
                 r_cb.spec_stats.rounds) == \
             (r_seq.spec_stats.proposed, r_seq.spec_stats.accepted,
              r_seq.spec_stats.rounds)
+    cs.clear_prefix_cache()
     assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
     assert cs.base_be.free_rows == cs.base_be.batch
     assert cs.small_be.free_rows == cs.small_be.batch
@@ -283,10 +294,13 @@ def test_spec_pool_exhaustion_mid_verification_preempts(engine_pair):
     """Regression: a pool too small for every in-flight verification
     chunk must PREEMPT the youngest request mid-verification (recompute)
     — not assert or leak blocks — and still finish every request with
-    sequential-identical outputs."""
+    sequential-identical outputs.  Prefix cache off: it pins the bare
+    preemption path (cache-assisted restore is covered in
+    test_prefix_cache.py)."""
     seq, handles, cs = _run_spec_pair_workloads(
         engine_pair, n_requests=4, kv_bytes=90_000, kv_fraction=0.5,
-        max_batch=4, threshold=9.5)      # high threshold: fallback-heavy
+        max_batch=4, threshold=9.5,      # high threshold: fallback-heavy
+        prefix_cache=False)
     assert cs.preemptions > 0
     assert len(cs.done) == 4
     for r_seq, h in zip(seq, handles):
