@@ -1,0 +1,117 @@
+"""Generate the README results table from the checked-in BENCH_*.json
+artifacts — the single source of truth for the numbers the README
+quotes.
+
+The table is injected between the ``<!-- BENCH_TABLE_START -->`` /
+``<!-- BENCH_TABLE_END -->`` markers in README.md.  Regenerate after
+refreshing any benchmark:
+
+  PYTHONPATH=src python benchmarks/readme_table.py          # rewrite
+  PYTHONPATH=src python benchmarks/readme_table.py --check  # CI: verify
+
+``--check`` exits nonzero when the README block differs from what the
+current JSON files produce (the docs CI job runs it, so a benchmark
+refresh that forgets the README fails fast)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+START = "<!-- BENCH_TABLE_START -->"
+END = "<!-- BENCH_TABLE_END -->"
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def build_table() -> str:
+    """Markdown table rows derived from each BENCH_*.json headline."""
+    rows = [
+        "| Benchmark | Workload | Headline (this repo's testbed, CPU) |"
+        " Artifact |",
+        "|---|---|---|---|",
+    ]
+    d = _load("BENCH_decode.json")
+    if d:
+        rows.append(
+            f"| Fused decode loop | {d['tokens']}-token greedy decode, "
+            f"fused `while_loop` vs eager per-token loop | "
+            f"**{d['speedup']:.2f}x** tok/s on the dispatch-bound micro "
+            f"probe | `BENCH_decode.json` |")
+    d = _load("BENCH_serving.json")
+    if d:
+        top = max(d["concurrency"], key=int)
+        rows.append(
+            f"| Continuous batching | {d['num_requests']} burst requests, "
+            f"continuous vs sequential scheduler | "
+            f"**{d['concurrency'][top]['speedup']:.2f}x** req/s at "
+            f"concurrency {top} | `BENCH_serving.json` |")
+    d = _load("BENCH_hierspec.json")
+    if d:
+        rows.append(
+            f"| Hierarchical speculation | SpecReason+spec-decode vs "
+            f"SpecReason-only, gamma={d['gamma']} | "
+            f"**{d['concurrency']['4']['speedup']:.2f}x** req/s at "
+            f"concurrency 4 | `BENCH_hierspec.json` |")
+    d = _load("BENCH_prefix.json")
+    if d:
+        rows.append(
+            f"| Radix prefix cache | best-of-N self-consistency "
+            f"(N={d['num_samples']}), cached vs cache-disabled | "
+            f"**{d['speedup']:.2f}x** req/s at hit rate "
+            f"{d['hit_rate']:.2f} | `BENCH_prefix.json` |")
+    d = _load("BENCH_chunked.json")
+    if d:
+        rows.append(
+            f"| Chunked prefill | mixed {d['num_short']} short / "
+            f"{d['num_long']} long prompts, chunked vs monolithic "
+            f"admission | **{d['p95_tpot_ratio']:.2f}x** p95 TPOT "
+            f"(decode stall), {d['req_s_ratio']:.2f}x req/s, "
+            f"{d['p95_ttft_ratio']:.2f}x p95 TTFT | "
+            f"`BENCH_chunked.json` |")
+    return "\n".join(rows)
+
+
+def inject(text: str, table: str) -> str:
+    if START not in text or END not in text:
+        raise SystemExit(f"README is missing the {START} / {END} markers")
+    head, rest = text.split(START, 1)
+    _, tail = rest.split(END, 1)
+    return f"{head}{START}\n{table}\n{END}{tail}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="verify README.md is up to date; do not write")
+    ap.add_argument("--readme", default=os.path.join(ROOT, "README.md"))
+    args = ap.parse_args(argv)
+    with open(args.readme) as f:
+        current = f.read()
+    updated = inject(current, build_table())
+    if args.check:
+        if updated != current:
+            sys.exit("README.md results table is stale: regenerate with "
+                     "`python benchmarks/readme_table.py`")
+        print("README results table matches the checked-in BENCH_*.json")
+        return
+    if updated != current:
+        with open(args.readme, "w") as f:
+            f.write(updated)
+        print(f"rewrote {args.readme}")
+    else:
+        print("README results table already up to date")
+
+
+if __name__ == "__main__":
+    main()

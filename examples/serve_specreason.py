@@ -17,6 +17,7 @@ eager`` to see how much of the latency the fused loop removes).
 
   PYTHONPATH=src python examples/serve_specreason.py -n 6
   PYTHONPATH=src python examples/serve_specreason.py -n 8 --gamma 6
+  PYTHONPATH=src python examples/serve_specreason.py -n 2 --testbed micro
 """
 
 import sys

@@ -35,6 +35,16 @@ self-consistency: every prompt is sampled N times (the N-1 re-prefills
 are cache hits) and the final answer is the majority vote over the N
 sampled answers, with the per-task vote breakdown printed.
 
+Admission prefill on the continuous scheduler is **chunked** by default
+(stall-free decode scheduling): each tick prefills at most
+``--max-prefill-tokens`` prompt tokens across all admitting requests and
+still runs every in-flight request's decode/speculation phases, so a
+long prompt never stalls the batch.  ``--no-chunked-prefill`` restores
+monolithic admission prefill; outputs are token-identical either way.
+The summary reports p50/p95 TTFT (time to first output token), TPOT
+(per-output-token latency) and prefill-stall time.  ``--verbose`` logs
+admission, per-chunk prefill progress and preemption events.
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
@@ -137,7 +147,11 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
     sched = ContinuousScheduler(ctrl, kv, max_batch=args.batch,
                                 context_capacity=min(base.max_len,
                                                      args.budget + 64),
-                                prefix_cache=not args.no_prefix_cache)
+                                prefix_cache=not args.no_prefix_cache,
+                                chunked_prefill=args.chunked_prefill,
+                                max_prefill_tokens=args.max_prefill_tokens,
+                                on_event=(lambda s: print(f"[sched] {s}"))
+                                if args.verbose else None)
     rng = random.Random(args.seed)
     pairs = [(t, jax.random.PRNGKey(1000 * args.seed + i))
              for i, t in enumerate(reqs)]
@@ -182,9 +196,20 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
         "arrival_rate": args.arrival_rate, "ticks": sched.ticks,
         "preemptions": sched.preemptions,
         "prefix_cache": not args.no_prefix_cache,
+        "chunked_prefill": args.chunked_prefill,
+        "max_prefill_tokens": args.max_prefill_tokens,
+        "prefill_chunks": sched.prefill_chunks,
         "num_samples": args.num_samples, "vote": args.vote,
         "accuracy": accuracy,
     })
+    if "p95_ttft_s" in stats:
+        print(f"[latency] ttft p50={stats['p50_ttft_s']:.3f}s "
+              f"p95={stats['p95_ttft_s']:.3f}s | tpot "
+              f"p50={stats.get('p50_tpot_s', 0.0) * 1e3:.1f}ms "
+              f"p95={stats.get('p95_tpot_s', 0.0) * 1e3:.1f}ms | "
+              f"prefill stall "
+              f"mean={stats.get('mean_prefill_stall_s', 0.0):.3f}s "
+              f"p95={stats.get('p95_prefill_stall_s', 0.0):.3f}s")
     stats.update({f"cache_{w}_{k}": v
                   for w, s in sched.cache_stats().items()
                   for k, v in s.items() if k in ("hit_rate",
@@ -202,6 +227,13 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.6)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="exp/ckpt")
+    ap.add_argument("--testbed", choices=("trained", "micro"),
+                    default="trained",
+                    help="trained = load (or lazily train) the testbed "
+                         "checkpoint pair; micro = the random-init "
+                         "dispatch-bound micro pair (instant startup, "
+                         "nonsense answers — scheduling/latency smoke "
+                         "runs only)")
     ap.add_argument("--decode-loop", choices=("fused", "eager"),
                     default="fused",
                     help="fused = one jitted while_loop per generate call "
@@ -240,7 +272,22 @@ def main(argv=None):
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the radix prefix cache over the paged "
                          "KV pools (continuous scheduler)")
+    ap.add_argument("--chunked-prefill", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="continuous scheduler: chunk admission prefill "
+                         "so no tick prefills more than "
+                         "--max-prefill-tokens prompt tokens and decode "
+                         "never stalls behind a long prompt (default on; "
+                         "outputs are token-identical either way)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=64,
+                    help="chunked prefill: per-tick prompt-prefill token "
+                         "budget across all admitting requests")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log admission / chunk-progress / preemption "
+                         "scheduler events (continuous scheduler)")
     args = ap.parse_args(argv)
+    if args.max_prefill_tokens < 1:
+        ap.error("--max-prefill-tokens must be >= 1")
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "
                  "only; drop --scheme or use the sequential scheduler")
@@ -258,7 +305,17 @@ def main(argv=None):
         ap.error("--vote needs --num-samples >= 2")
 
     fused = args.decode_loop == "fused"
-    base, small = load_testbed_engines(args.ckpt_dir)
+    if args.testbed == "micro":
+        from ..configs import testbed
+        from ..models.model import Model
+        from ..serving.engine import Engine
+        bm, sm = Model(testbed.MICRO), Model(testbed.MICRO_SMALL)
+        base = Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=1024,
+                      name="testbed-micro", fused=fused)
+        small = Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=1024,
+                       name="testbed-micro-small", fused=fused)
+    else:
+        base, small = load_testbed_engines(args.ckpt_dir)
     rng = random.Random(args.seed)
     reqs = [tasks.sample_task(rng) for _ in range(args.num_requests)]
 

@@ -55,6 +55,20 @@ class RowSnapshot:
 
 
 class BatchEngine:
+    """One model, ``batch`` independent ragged rows over a single batched
+    DecodeState.
+
+    Contract: rows are allocated/freed by the scheduler (`alloc_row`/
+    `free_row`); every multi-row method advances ONLY the rows it is
+    given, in ONE jitted dispatch with ONE host sync, leaving uninvolved
+    rows untouched (their pad writes land past their position — masked
+    until overwritten).  When ``capacity`` equals the sequential engine's
+    ``max_len``, each row's tokens are bit-identical to a sequential
+    Engine session (greedy and sampled) — the foundation of every
+    scheduler-level token-identity guarantee.  Rollback is O(1) per row
+    (`snapshot_row`/`restore_row`/`truncate_row`); block-level accounting
+    lives with the caller in ``serving.paged_kv``."""
+
     def __init__(self, model: Model, params, batch: int,
                  capacity: int = 1024,
                  buckets: Sequence[int] = DEFAULT_BUCKETS, name: str = "",
@@ -89,6 +103,9 @@ class BatchEngine:
 
     # ------------------------------------------------------------- rows
     def alloc_row(self) -> Optional[int]:
+        """Claim a fresh row at position 0 (None when all rows are
+        live).  The row's stale cache contents are invisible: attention
+        masks by position and every write lands at the row's cursor."""
         if not self._free:
             return None
         r = self._free.pop()
@@ -98,6 +115,8 @@ class BatchEngine:
         return r
 
     def free_row(self, row: int) -> None:
+        """Return a live row to the free list (its cache is left in
+        place — reclaimed lazily by the next occupant's writes)."""
         assert self._live[row], f"free of dead row {row}"
         self._live[row] = False
         self.pos[row] = 0
@@ -105,9 +124,14 @@ class BatchEngine:
 
     @property
     def free_rows(self) -> int:
+        """Rows currently available to `alloc_row`."""
         return len(self._free)
 
     def snapshot_row(self, row: int) -> RowSnapshot:
+        """O(1) rollback point (position + its logits); restore with
+        `restore_row`.  Valid as long as the row is not freed — the
+        cache itself is never copied (attention-only masking makes the
+        stale suffix invisible after restore)."""
         return RowSnapshot(int(self.pos[row]),
                            self.last_logits[row].copy())
 
@@ -222,6 +246,32 @@ class BatchEngine:
             if want_logits:
                 out.append(lg[r, :n])
         return out if want_logits else None
+
+    def prefill_rows(self, rows: Sequence[int],
+                     chunks: Sequence[Sequence[int]],
+                     starts: Sequence[int],
+                     want_logits: bool = False
+                     ) -> Optional[List[np.ndarray]]:
+        """Multi-row CHUNKED prefill: append prompt chunk ``chunks[i]``
+        to row ``rows[i]``, which must currently sit at token offset
+        ``starts[i]`` — the row's prefill cursor.  A chunk continuation
+        is exactly a ragged batched prefill at a nonzero per-row offset
+        (the same path prefix-cache-seeded rows already take), so this
+        delegates to :meth:`extend_rows` after checking the cursor
+        contract: each row's position must equal its declared start, or
+        the chunk would silently land at the wrong offsets and corrupt
+        the prompt.  Partial-final-block handling lives in the paged
+        pool's accounting (``PagedSeq.append`` fills a partially-filled
+        tail block before claiming new ones); physically the batched
+        rows are dense, so a chunk starting mid-block simply writes the
+        next cache slots of its row."""
+        assert len(rows) == len(chunks) == len(starts)
+        for r, s in zip(rows, starts):
+            assert self._live[r], f"chunked prefill into dead row {r}"
+            assert self.pos[r] == s, \
+                f"row {r}: chunk declared at offset {s} but the row " \
+                f"sits at {self.pos[r]} — prefill cursor out of sync"
+        return self.extend_rows(rows, chunks, want_logits)
 
     # ---------------------------------------------------------- generate
     def _decode_buf(self, max_tokens: int) -> int:

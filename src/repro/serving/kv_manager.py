@@ -51,6 +51,7 @@ class KVBudget:
     base_fraction: float = 0.8      # paper colocates; base dominates
 
     def split(self) -> Tuple[int, int]:
+        """(base_bytes, small_bytes) under the static fraction."""
         b = int(self.total_bytes * self.base_fraction)
         return b, self.total_bytes - b
 
@@ -77,6 +78,8 @@ class KVManager:
         return kv_bytes_per_token(self.cfgs[which]) * self.block_size
 
     def capacity_blocks(self, which: str) -> int:
+        """Total KV blocks ``which``'s static partition can hold — the
+        size of its paged pool."""
         bb = self.block_bytes(which)
         if bb == 0:
             # no attention cache: express the byte budget in units of one
@@ -86,6 +89,7 @@ class KVManager:
         return self.capacity_bytes[which] // bb
 
     def free_blocks(self, which: str) -> int:
+        """Blocks not charged to any live session."""
         return self.capacity_blocks(which) - self.used_blocks[which]
 
     def headroom_blocks(self, step_tokens: int, gamma: int = 0) -> int:
@@ -99,6 +103,17 @@ class KVManager:
         tests/test_serving.py)."""
         inflight = step_tokens + 1 + ((gamma + 1) if gamma > 0 else 0)
         return -(-inflight // self.block_size)
+
+    def chunk_blocks(self, cursor_tokens: int, chunk_tokens: int) -> int:
+        """New blocks one prefill chunk claims on top of a sequence
+        already ``cursor_tokens`` long — the chunked-prefill admission /
+        reservation unit.  Partial-final-block aware: a chunk that starts
+        inside the cursor's partially-filled tail block reuses its free
+        slots and claims blocks only for the overflow, so reserving chunk
+        by chunk sums to exactly the monolithic reservation."""
+        before = -(-cursor_tokens // self.block_size)
+        after = -(-(cursor_tokens + chunk_tokens) // self.block_size)
+        return after - before
 
     def prefix_cache_blocks(self, which: str, fraction: float = 0.25,
                             max_blocks: int = 256) -> int:

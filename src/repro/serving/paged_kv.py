@@ -124,9 +124,18 @@ class PagedSeq:
 
     @property
     def block_table(self) -> List[int]:
+        """Copy of the block-id table (kernel block-table source)."""
         return list(self.blocks)
 
     def append(self, n_tokens: int) -> Tuple[List[int], List[Tuple[int, int]]]:
+        """Grow the logical length by ``n_tokens``, allocating whole
+        blocks as needed — a partially-filled tail block's free slots are
+        reused first (what makes chunk-by-chunk prefill reservation sum
+        to the monolithic reservation).  Returns ``(new_blocks, copies)``
+        where ``copies`` lists the ``(src, dst)`` CoW pairs a physical
+        store must execute (emitted when the tail was shared with a
+        snapshot or a cached prefix).  On ``PoolExhausted`` the partial
+        grow is rolled back so the caller can preempt and retry."""
         if n_tokens < 0:
             raise ValueError("append of negative token count")
         if n_tokens == 0:
@@ -230,6 +239,10 @@ class PagedSeq:
         self.length = n_tokens
 
     def snapshot(self) -> BlockTableSnapshot:
+        """Refcounted rollback point: retains every current block (so
+        later appends into the shared tail copy-on-write) until the
+        snapshot is consumed by :meth:`restore` or dropped via
+        :meth:`discard_snapshot` — leaking one leaks its blocks."""
         for b in self.blocks:
             self.pool.retain(b)
         return BlockTableSnapshot(tuple(self.blocks), self.length)
@@ -253,6 +266,8 @@ class PagedSeq:
             self.pool.release(b)
 
     def free(self) -> None:
+        """Release the sequence's own reference on every block (shared
+        cache/snapshot references survive) and empty the table."""
         for b in self.blocks:
             self.pool.release(b)
         self.blocks = []

@@ -180,6 +180,7 @@ class RadixCache:
     # ------------------------------------------------------------ queries
     @property
     def cached_blocks(self) -> int:
+        """Number of cached blocks (trie nodes, root excluded)."""
         return self._nodes
 
     def _tick(self) -> int:

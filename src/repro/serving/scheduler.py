@@ -54,6 +54,22 @@ and admits against the cache instead of duplicating the work.  Under
 pool pressure idle cached blocks are evicted LRU-first — before an
 admission is declared blocked and before a live request is preempted.
 
+Admission prefill is **chunked** (Sarathi-style stall-free scheduling, on
+by default): a newly admitted request's cache-miss prompt suffix is split
+into chunks of at most ``max_prefill_tokens`` tokens and prefilled across
+ticks — every tick runs ONE bounded batched prefill call per engine for
+all mid-prefill rows (each row continuing at its own ``prefill`` cursor
+offset over its own partially-filled paged blocks) *plus* the full
+speculate/verify/fallback/answer phases for running rows, so a long
+prompt arriving mid-burst can no longer stall every in-flight decode tick
+behind its monolithic prefill.  Block reservation is incremental (one
+chunk ahead), per-chunk full blocks are inserted into the prefix cache as
+they land (so a preempted mid-prefill request restores its finished
+chunks from the cache on readmission, and waiting best-of-N siblings
+admit as hits the moment the cold prefill completes), and chunked output
+is token-identical per request to unchunked serving — greedy, sampled,
+spec-decode and prefix-cache modes (tested in tests/test_chunked.py).
+
 Per-request greedy-token equivalence with the sequential regime is tested
 in tests/test_serving.py (same tokens, same steps, same answers)."""
 
@@ -63,7 +79,7 @@ import dataclasses
 import time
 import uuid
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +100,11 @@ from .spec_engine import BatchSpecEngine, SpecLedger, SpecRow
 
 @dataclasses.dataclass
 class Request:
+    """One submitted task's serving handle: identity, timing milestones
+    (submission, admission, prefill completion, first output token,
+    finish) and the per-request observability counters the workload
+    summary aggregates (TTFT/TPOT percentiles, prefill stall, prefix-
+    cache hit tokens)."""
     task: Task
     request_id: str = dataclasses.field(
         default_factory=lambda: uuid.uuid4().hex[:8])
@@ -100,12 +121,46 @@ class Request:
     # admission; a preempted request's counters reflect its LAST admission)
     prompt_tokens: int = 0
     cache_hit_tokens: int = 0
+    # latency milestones (continuous scheduler): when the request was LAST
+    # admitted, when its (possibly chunked) prompt prefill completed, and
+    # when its first output token landed.  ``first_token_at`` is sticky
+    # across preemptions — recompute re-derives tokens already streamed,
+    # so TTFT keeps the first emission; ``admitted_at``/``prefill_done_at``
+    # reflect the last admission (the recompute cost shows up in TPOT).
+    admitted_at: Optional[float] = None
+    prefill_done_at: Optional[float] = None
+    first_token_at: Optional[float] = None
 
     @property
     def e2e_latency(self) -> Optional[float]:
         if self.finished_at is None:
             return None
         return self.finished_at - self.submitted_at
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first output token (seconds since submission)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def prefill_stall_s(self) -> Optional[float]:
+        """Seconds between (last) admission and prompt-prefill completion
+        — the window in which the request occupied a row without decoding
+        (under chunked prefill this is the chunk-spread; unchunked it is
+        the monolithic prefill's tick share)."""
+        if self.prefill_done_at is None or self.admitted_at is None:
+            return None
+        return self.prefill_done_at - self.admitted_at
+
+    def tpot(self, n_output_tokens: int) -> Optional[float]:
+        """Per-output-token latency: decode seconds per generated token
+        after the first (None until finished)."""
+        if self.first_token_at is None or self.finished_at is None:
+            return None
+        return (self.finished_at - self.first_token_at) \
+            / max(n_output_tokens - 1, 1)
 
 
 class Scheduler:
@@ -121,6 +176,7 @@ class Scheduler:
         self.done: List[Request] = []
 
     def submit(self, task: Task, key: Optional[jax.Array] = None) -> Request:
+        """Queue a task FIFO; returns its Request handle."""
         req = Request(task, key=key)
         self.queue.append(req)
         return req
@@ -168,6 +224,8 @@ class Scheduler:
         return req
 
     def drain(self, key: jax.Array) -> List[Request]:
+        """Serve the queue to exhaustion (or to an admission block —
+        the head request's ``blocked_reason`` then says why)."""
         out = []
         while self.queue:
             key, sub = jax.random.split(key)
@@ -195,6 +253,16 @@ class _Active:
     base_seq: PagedSeq
     small_seq: PagedSeq
     alive: bool = True
+    # chunked prefill: the full prompt and how many of its tokens are in
+    # the engine rows so far (cached-seeded + prefilled).  While
+    # ``cursor < len(prompt)`` the request sits in the serving-side
+    # ``prefill`` phase; each tick's bounded prefill batch advances the
+    # cursor by at most the tick's remaining token budget.  Block
+    # reservation is incremental: the paged seqs' length always covers
+    # exactly the reserved chunk (admission reserves chunk 1, the prefill
+    # tick grows per chunk thereafter).
+    prompt: List[int] = dataclasses.field(default_factory=list)
+    cursor: int = 0
     # step-boundary rollback points (speculate -> verify window)
     b_snap: Optional[RowSnapshot] = None
     s_snap: Optional[RowSnapshot] = None
@@ -242,8 +310,31 @@ class _SchedulerLedger(SpecLedger):
             seq.truncate(length)
 
 
+# Per-tick prompt-prefill token budget (chunked prefill): bounds the
+# prefill work any single tick performs so in-flight decode/speculation
+# never stalls behind a long prompt.  Also the largest prefill bucket the
+# chunked path ever compiles.
+DEFAULT_MAX_PREFILL_TOKENS = 64
+
+
 class ContinuousScheduler:
-    """Step-interleaved continuous batching over a SpecReason pair."""
+    """Step-interleaved continuous batching over a SpecReason pair.
+
+    Public contract (per :meth:`tick`): one bounded chunked-prefill batch
+    (``<= max_prefill_tokens`` prompt tokens across all mid-prefill rows,
+    one ``prefill_rows`` call per engine), then every running request's
+    current phase as per-phase batched calls — one small-model speculate
+    decode, one base-model scoring prefill, one merged delim/close
+    extend, one fallback+answer decode (or the batched spec-decode
+    rounds).  Outputs are token-identical per request to the sequential
+    controller, and chunked prefill is token-identical to unchunked
+    (prefill consumes no PRNG keys and lands the same KV at the same
+    positions, only spread across ticks).
+
+    ``chunked_prefill=False`` restores monolithic admission prefill (the
+    whole cache-miss suffix in the admission tick); ``on_event`` receives
+    human-readable admission / chunk-progress / preemption lines (the
+    serve CLI's ``--verbose``)."""
 
     def __init__(self, controller: SpecReason, kv: KVManager,
                  max_batch: int = 8, context_capacity: int = 256,
@@ -251,7 +342,10 @@ class ContinuousScheduler:
                  spec_decode: Optional[bool] = None,
                  gamma: Optional[int] = None,
                  prefix_cache: bool = True,
-                 cache_blocks: Optional[int] = None):
+                 cache_blocks: Optional[int] = None,
+                 chunked_prefill: bool = True,
+                 max_prefill_tokens: int = DEFAULT_MAX_PREFILL_TOKENS,
+                 on_event: Optional[Callable[[str], None]] = None):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -308,11 +402,17 @@ class ContinuousScheduler:
                                       dtype=be.state.k.dtype)
                 self.caches[which] = RadixCache(self.pools[which], store,
                                                 meter=be.meter)
+        if max_prefill_tokens < 1:
+            raise ValueError("max_prefill_tokens must be >= 1")
+        self.chunked = chunked_prefill
+        self.max_prefill_tokens = max_prefill_tokens
+        self.on_event = on_event
         self.queue: Deque[Request] = deque()
         self.active: List[_Active] = []
         self.done: List[Request] = []
         self.preemptions = 0
         self.ticks = 0
+        self.prefill_chunks = 0      # chunked-prefill batches dispatched
         # one compiled batched key split per tick phase (an un-jitted vmap
         # would retrace per call; a per-request host split would dispatch
         # per request)
@@ -320,6 +420,9 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------- intake
     def submit(self, task: Task, key: Optional[jax.Array] = None) -> Request:
+        """Queue a task; returns its Request handle (admission happens
+        at the next tick, subject to rows/blocks).  ``key`` pins the
+        request's PRNG chain — same key, same tokens, any scheduler."""
         req = Request(task, key=key)
         self.queue.append(req)
         return req
@@ -364,19 +467,27 @@ class ContinuousScheduler:
             nb -= 1
         return max(nb, 0) * self.kv.block_size
 
+    def _log(self, msg: str) -> None:
+        if self.on_event is not None:
+            self.on_event(msg)
+
     def _admit(self, key: jax.Array) -> None:
         admitted: List[_Active] = []
-        prompts: List[List[int]] = []
-        suffixes: List[List[int]] = []
-        # prompts THIS admission round will newly insert blocks for
-        # (wait-for-prefix: a queued request whose cacheable prefix one
-        # of these inserts will EXTEND defers one tick and admits
-        # against the cache instead of duplicating the prefill — the
-        # best-of-N admission pattern.  Keyed on actual block overlap,
-        # not just a shared root: a template-family request whose shared
-        # prefix is already cached must NOT wait on a sibling whose
-        # pending insert only adds that sibling's unique suffix)
-        fresh_prompts: List[List[int]] = []
+        # prompts that will newly insert cache blocks (wait-for-prefix: a
+        # queued request whose cacheable prefix one of these inserts will
+        # EXTEND defers one tick and admits against the cache instead of
+        # duplicating the prefill — the best-of-N admission pattern.
+        # Keyed on actual block overlap, not just a shared root: a
+        # template-family request whose shared prefix is already cached
+        # must NOT wait on a sibling whose pending insert only adds that
+        # sibling's unique suffix).  Seeded with the prompts of requests
+        # whose CHUNKED prefill is still in flight — their inserts land
+        # over the coming ticks, and a sibling that admitted meanwhile
+        # would duplicate the whole cold prefill.
+        fresh_prompts: List[List[int]] = [
+            a.prompt for a in self.active
+            if a.state.phase == "prefill"] if self.caches is not None \
+            else []
         # per-engine (rows, slot_lists) whose cached prefixes import in
         # one batched dispatch after the admission loop
         loads: Dict[str, Tuple[List[int], List[List[int]]]] = {
@@ -415,10 +526,21 @@ class ContinuousScheduler:
                     # admit it as a deeper hit next tick
                     req.blocked_reason = ("deferred: waiting for shared "
                                           "prefix insert")
+                    self._log(f"defer {req.request_id}: waiting for "
+                              f"shared prefix insert (hit {cached}"
+                              f"/{cacheable} cacheable tokens)")
                     idx += 1
                     continue
-            need = self.pools["base"].blocks_for_tokens(len(prompt)) \
-                - cached // bs + self._headroom_blocks()
+            # chunked prefill reserves blocks INCREMENTALLY: admission
+            # claims only the first chunk's blocks (+ headroom); each
+            # later chunk reserves through _grow at its prefill tick,
+            # preempting/evicting under pressure like any mid-serve grow.
+            # Unchunked admission reserves the whole suffix up front.
+            first = len(prompt) - cached
+            if self.chunked:
+                first = min(first, self.max_prefill_tokens)
+            need = self.kv.chunk_blocks(cached, first) \
+                + self._headroom_blocks()
             # each pool must cover at least one context_capacity-sized
             # allotment (the admission-reservation unit), or no request
             # could ever run to completion without self-exhausting
@@ -477,6 +599,10 @@ class ContinuousScheduler:
                 break
             del self.queue[idx]
             req.blocked_reason = None
+            req.admitted_at = time.perf_counter()
+            req.prefill_done_at = None      # re-set when THIS admission's
+            a.prompt = list(prompt)         # (possibly chunked) prefill
+            a.cursor = cached               # completes
             if self.caches is not None:
                 # cache-oriented per-request counters (summarize's hit
                 # rate, the serve CLI's cache[hit=..] line); left zero
@@ -493,13 +619,21 @@ class ContinuousScheduler:
                     loads["base"][1].append(chain_slots["base"])
                     loads["small"][0].append(a.small_row)
                     loads["small"][1].append(chain_slots["small"])
-            a.base_seq.append(len(prompt) - cached)
-            a.small_seq.append(len(prompt) - cached)
+            # reserve the first chunk's blocks now (the admission `need`
+            # check above guaranteed them); later chunks grow at their
+            # prefill ticks
+            a.base_seq.append(first)
+            a.small_seq.append(first)
             if self.caches is not None and cached < cacheable:
                 fresh_prompts.append(prompt)
             admitted.append(a)
-            prompts.append(prompt)
-            suffixes.append(prompt[cached:])
+            self._log(f"admit {req.request_id}: prompt={len(prompt)} "
+                      f"cached={cached} first_chunk={first}"
+                      + ("" if first >= len(prompt) - cached else
+                         f" (chunked, {len(prompt) - cached} suffix "
+                         f"tokens over >= "
+                         f"{-(-(len(prompt) - cached) // max(first, 1))} "
+                         f"ticks)"))
         if admitted:
             for which, be in (("base", self.base_be),
                               ("small", self.small_be)):
@@ -508,34 +642,99 @@ class ContinuousScheduler:
                     store = self.caches[which].store
                     be.load_prefix_pages_rows(rows, store.k_pages,
                                               store.v_pages, slot_lists)
-            # batched prompt prefill: all newly admitted requests land in
-            # one length-bucketed call per engine, each row starting at
-            # its own cached-prefix offset
-            self.base_be.extend_rows([a.base_row for a in admitted],
-                                     suffixes)
-            self.small_be.extend_rows([a.small_row for a in admitted],
-                                      suffixes)
+            # the prompt suffix prefill itself happens in the tick's
+            # bounded chunked-prefill batch (_prefill_tick): newly
+            # admitted rows enter the serving-side ``prefill`` phase at
+            # their cached-prefix cursor
+            for a in admitted:
+                a.state.phase = "prefill"
+                self.active.append(a)
+
+    # ----------------------------------------------------------- prefill
+    def _prefill_tick(self) -> None:
+        """The tick's bounded chunked-prefill batch: advance every
+        mid-prefill row by its next chunk, FIFO over admission order,
+        spending at most ``max_prefill_tokens`` prompt tokens per tick
+        across the whole batch (unbounded when ``chunked_prefill`` is
+        off) — ONE ``prefill_rows`` call per engine, each row continuing
+        at its own cursor offset.  Per chunk: reserve the chunk's blocks
+        (incremental — may evict cached prefixes or preempt the youngest
+        victim), prefill, insert the now-complete full blocks into the
+        prefix cache (so preempted mid-prefill requests restore finished
+        chunks on readmission and wait-for-prefix siblings admit as hits
+        as soon as the cold prefill lands).  A request whose cursor
+        reaches its prompt end enters the controller's think phase."""
+        acts = [a for a in self.active if a.state.phase == "prefill"]
+        if not acts:
+            return
+        budget = self.max_prefill_tokens if self.chunked else None
+        # FCFS budget packing (vLLM/Sarathi-style): the oldest mid-prefill
+        # row takes as much of the tick's budget as it needs, younger rows
+        # pack into the leftover.  Completion ORDER therefore matches
+        # monolithic prefill — fair-share policies that slice the budget
+        # across rows stretch the oldest (longest) prompt's prefill
+        # unboundedly under a steady stream of short admissions, which is
+        # exactly a head-of-line TTFT pathology in the other direction.
+        chunks: List[Tuple[_Active, int]] = []
+        spent = 0
+        for a in acts:               # admission order (deterministic)
+            if not a.alive:          # preempted by an earlier chunk's grow
+                continue
+            rest = len(a.prompt) - a.cursor
+            take = rest if budget is None else min(rest, budget - spent)
+            if take <= 0:
+                continue             # tick budget spent; resumes next tick
+            # incremental block reservation: the seqs' reserved length
+            # must cover this chunk (admission reserved chunk 1 only)
+            grow = a.cursor + take - a.base_seq.length
+            if grow > 0:
+                self._grow(a, "base", grow)
+                if a.alive:
+                    self._grow(a, "small", grow)
+            if a.alive:
+                chunks.append((a, take))
+                spent += take
+        # a later row's grow may have preempted an earlier chunked row
+        chunks = [(a, t) for a, t in chunks if a.alive]
+        if not chunks:
+            return
+        for be, rows in ((self.base_be,
+                          [a.base_row for a, _ in chunks]),
+                         (self.small_be,
+                          [a.small_row for a, _ in chunks])):
+            be.prefill_rows(rows,
+                            [a.prompt[a.cursor:a.cursor + t]
+                             for a, t in chunks],
+                            [a.cursor for a, _ in chunks])
+        self.prefill_chunks += 1
+        bs = self.kv.block_size
+        for a, take in chunks:
+            a.cursor += take
             if self.caches is not None:
                 # cache every full prompt block not already cached: the
                 # cache retains the sequence's blocks (shared from here
-                # on) and copies their KV out of the freshly
-                # prefilled rows
-                for a, prompt in zip(admitted, prompts):
-                    nb_full = len(prompt) // bs
-                    if not nb_full:
-                        continue
+                # on) and copies their KV out of the freshly prefilled
+                # row (per chunk this fetches only the NEW full blocks)
+                nb_full = a.cursor // bs
+                if nb_full:
                     for cache, be, seq, row in (
                             (self.caches["base"], self.base_be,
                              a.base_seq, a.base_row),
                             (self.caches["small"], self.small_be,
                              a.small_seq, a.small_row)):
                         cache.insert(
-                            prompt[:nb_full * bs], seq.blocks[:nb_full],
+                            a.prompt[:nb_full * bs], seq.blocks[:nb_full],
                             lambda t0, t1, be=be, row=row:
                                 be.export_prefix(row, t0, t1))
-            for a in admitted:
+            if a.cursor == len(a.prompt):
+                a.req.prefill_done_at = time.perf_counter()
                 a.state.phase = self.controller.think_phase(a.state)
-                self.active.append(a)
+                if a.cursor > take:      # took more than one chunk
+                    self._log(f"prefill {a.req.request_id}: done "
+                              f"({a.cursor} tokens)")
+            else:
+                self._log(f"prefill {a.req.request_id}: "
+                          f"{a.cursor}/{len(a.prompt)} tokens")
 
     # ------------------------------------------------------------ blocks
     def _grow(self, a: _Active, which: str, n_tokens: int) -> None:
@@ -572,6 +771,10 @@ class ContinuousScheduler:
         victim.req.blocked_reason = "preempted: KV block pool exhausted"
         self.queue.appendleft(victim.req)
         self.preemptions += 1
+        mid = f" (mid-prefill at {victim.cursor}/{len(victim.prompt)})" \
+            if victim.state.phase == "prefill" else ""
+        self._log(f"preempt {victim.req.request_id}: KV block pool "
+                  f"exhausted{mid}; requeued for recompute")
 
     def _release(self, a: _Active) -> None:
         for snap, seq in ((a.b_seq_snap, a.base_seq),
@@ -588,11 +791,17 @@ class ContinuousScheduler:
 
     # -------------------------------------------------------------- tick
     def tick(self, key: jax.Array) -> bool:
-        """One continuous-batching turn: admit, then execute every active
-        request's current phase as per-phase batched calls.  Returns True
-        while there is work left."""
+        """One continuous-batching turn: admit, run the bounded
+        chunked-prefill batch, then execute every running request's
+        current phase as per-phase batched calls.  Returns True while
+        there is work left."""
         self.ticks += 1
         self._admit(key)
+        # Stall-free scheduling: the tick's prefill work is bounded by
+        # max_prefill_tokens (chunked mode), so the decode/speculation
+        # phases below run EVERY tick regardless of how long the queued
+        # prompts are — a long admission never starves in-flight decodes.
+        self._prefill_tick()
         # One tick = one reasoning step for every in-flight request: each
         # phase batch is collected FRESH so a request drafted this tick is
         # verified this tick (and, on reject, regenerated this tick) —
@@ -610,6 +819,14 @@ class ContinuousScheduler:
         ans = [a for a in self.active if a.state.phase == "answer"]
         if fall or ans:
             self._base_decode_batch(fall, ans)
+        # TTFT bookkeeping: the first tick that left output tokens in a
+        # request's trace stamps its first-token time (tick-granular —
+        # the batched calls do not expose per-token host timestamps)
+        now = time.perf_counter()
+        for a in self.active:
+            if a.req.first_token_at is None and (a.state.thinking or
+                                                 a.state.answer_ids):
+                a.req.first_token_at = now
         self._finish()
         return bool(self.active or self.queue)
 
@@ -619,6 +836,8 @@ class ContinuousScheduler:
             fn(acts)
 
     def drain(self, key: jax.Array) -> List[Request]:
+        """Tick until queue and batch are empty; returns the requests
+        finished by THIS drain (earlier finishes stay in ``done``)."""
         done_before = len(self.done)
         while True:
             key, sub = jax.random.split(key)
@@ -817,6 +1036,8 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------- stats
     def pool_utilization(self) -> Dict[str, float]:
+        """Fraction of each engine's KV block pool currently claimed
+        (live sequences + snapshots + cached prefixes)."""
         return {w: p.num_used / p.num_blocks for w, p in self.pools.items()}
 
     def cache_stats(self) -> Dict[str, Dict[str, float]]:

@@ -97,7 +97,19 @@ class SpecLedger:
 
 
 class BatchSpecEngine:
-    """Batched token-level speculative decoding across BatchEngine rows."""
+    """Batched token-level speculative decoding across BatchEngine rows.
+
+    Per round, for every still-active row: ONE fused gamma-token draft
+    proposal (draft engine), ONE base verification prefill over
+    ``[pending] + chunk`` (deferred-feed layout), ONE fused batched
+    acceptance program — rejected suffixes roll back by O(1) row
+    truncate plus the ledger's block-table truncation.  Contract: each
+    row's emitted tokens are bit-identical to the sequential
+    ``core.spec_decode`` routine given the same key (greedy AND sampled,
+    ragged budgets/stop sets, rows finishing at different rounds —
+    tested in tests/test_spec_engine.py), and the engine owns BOTH
+    engines' rows for the duration (the draft context is kept
+    token-synchronized with the base)."""
 
     def __init__(self, base_be: BatchEngine, draft_be: BatchEngine,
                  gamma: int = 4):

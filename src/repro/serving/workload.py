@@ -77,6 +77,44 @@ def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
                     f"scheduler stalled: {blocked or 'unknown reason'}")
 
 
+def run_workload_ticks(sched: ContinuousScheduler,
+                       pairs: Sequence[Tuple[Task, jax.Array]],
+                       arrival_ticks: Sequence[int],
+                       key: Optional[jax.Array] = None) -> List[Request]:
+    """Drive a continuous scheduler with TICK-synchronous arrivals:
+    request ``i`` is submitted just before the scheduler's
+    ``arrival_ticks[i]``-th tick.  Unlike wall-clock arrivals this makes
+    the admission/batching composition deterministic — a slow host (or a
+    slow scheduling policy) cannot pile arrivals up differently between
+    two compared runs, which is what lets latency benchmarks report
+    stable A/B ratios on noisy shared CPUs.  Latency milestones are
+    still stamped in wall time."""
+    assert len(pairs) == len(arrival_ticks)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    handles: List[Request] = []
+    i, t = 0, 0
+    while i < len(pairs) or sched.active or sched.queue:
+        while i < len(pairs) and t >= arrival_ticks[i]:
+            task, k = pairs[i]
+            handles.append(sched.submit(task, key=k))
+            i += 1
+        done_before = len(sched.done)
+        key, sub = jax.random.split(key)
+        sched.tick(sub)
+        t += 1
+        if i >= len(pairs) and not sched.active \
+                and len(sched.done) == done_before and sched.queue:
+            # nothing in flight, nothing finished, nothing left to
+            # arrive: the queue is permanently admission-blocked —
+            # surface why instead of spinning (same contract as
+            # run_workload)
+            blocked = [r.blocked_reason for r in sched.queue
+                       if r.blocked_reason]
+            raise RuntimeError(
+                f"scheduler stalled: {blocked or 'unknown reason'}")
+    return handles
+
+
 def expand_best_of_n(pairs: Sequence[Tuple[Task, jax.Array]],
                      n: int) -> List[Tuple[Task, jax.Array]]:
     """Self-consistency expansion: each (task, key) becomes ``n``
@@ -149,6 +187,11 @@ def percentile(sorted_vals: List[float], p: float) -> float:
 
 
 def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
+    """Aggregate one workload run: throughput (req/s, tok/s), end-to-end
+    latency percentiles, TTFT / per-output-token (TPOT) / prefill-stall
+    percentiles (continuous scheduler — the sequential regime does not
+    stamp first-token times), plus spec-decode and prefix-cache counters
+    when the run exercised them."""
     lats = sorted(h.e2e_latency for h in handles if h.e2e_latency is not None)
     toks = sum(len(h.result.thinking_ids) + len(h.result.answer_ids)
                for h in handles if h.result is not None)
@@ -162,6 +205,28 @@ def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
         "p95_latency_s": round(percentile(lats, 0.95), 4),
         "mean_latency_s": round(sum(lats) / n, 4) if n else 0.0,
     }
+    # time-to-first-token / per-output-token latency / prefill stall:
+    # stamped per request by the continuous scheduler (tick-granular)
+    ttfts = sorted(h.ttft for h in handles if h.ttft is not None)
+    if ttfts:
+        out["p50_ttft_s"] = round(percentile(ttfts, 0.50), 4)
+        out["p95_ttft_s"] = round(percentile(ttfts, 0.95), 4)
+        out["mean_ttft_s"] = round(sum(ttfts) / len(ttfts), 4)
+        tpots = sorted(
+            t for t in (h.tpot(len(h.result.thinking_ids)
+                               + len(h.result.answer_ids))
+                        for h in handles if h.result is not None)
+            if t is not None)
+        if tpots:
+            out["p50_tpot_s"] = round(percentile(tpots, 0.50), 5)
+            out["p95_tpot_s"] = round(percentile(tpots, 0.95), 5)
+        stalls = sorted(h.prefill_stall_s for h in handles
+                        if h.prefill_stall_s is not None)
+        if stalls:
+            out["mean_prefill_stall_s"] = round(
+                sum(stalls) / len(stalls), 4)
+            out["p95_prefill_stall_s"] = round(
+                percentile(stalls, 0.95), 4)
     # token-level speculation (hierarchical mode): per-request acceptance
     # rate and mean accepted draft tokens per verification round, averaged
     # over the requests that actually ran spec-decode rounds

@@ -1,0 +1,291 @@
+"""Chunked prefill + stall-free tick scheduling: token identity with
+unchunked serving (greedy, sampled, spec-decode, prefix-cache modes),
+incremental block reservation, mid-prefill preemption, the prefill-cursor
+contract, and the TTFT/TPOT/prefill-stall surfacing."""
+
+import random
+
+import jax
+import pytest
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.workload import expand_best_of_n, summarize
+from repro.tokenizer import toy as tk
+
+BASE_CFG = ModelConfig(name="cb", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=tk.VOCAB_SIZE).validate()
+SMALL_CFG = ModelConfig(name="cs", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    return (Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256),
+            Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256))
+
+
+def _mk_controller(engine_pair, temperature=0.0, spec=False, gamma=3,
+                   threshold=5.0, token_budget=48, max_steps=6):
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
+                           token_budget=token_budget, max_steps=max_steps,
+                           use_spec_decode=spec, spec_gamma=gamma,
+                           sampling=SamplingParams(temperature=temperature))
+    return SpecReason(base, small, cfg)
+
+
+def _mk_sched(ctrl, *, chunked, max_prefill_tokens=16, prefix_cache=True,
+              kv_bytes=1 << 26, kv_fraction=0.8, max_batch=4,
+              on_event=None):
+    kv = KVManager(BASE_CFG, SMALL_CFG,
+                   KVBudget(total_bytes=kv_bytes, base_fraction=kv_fraction))
+    return ContinuousScheduler(ctrl, kv, max_batch=max_batch,
+                               context_capacity=128,
+                               prefix_cache=prefix_cache,
+                               chunked_prefill=chunked,
+                               max_prefill_tokens=max_prefill_tokens,
+                               on_event=on_event)
+
+
+def _long_workload(n_requests=3, seed=0, min_steps=10, max_steps=12):
+    """Long prompts (~45-55 tokens) so a 16-token budget genuinely chunks
+    each admission over several ticks."""
+    rng = random.Random(seed)
+    reqs = [tasks.sample_task(rng, min_steps=min_steps, max_steps=max_steps)
+            for _ in range(n_requests)]
+    keys = [jax.random.PRNGKey(100 * seed + i) for i in range(n_requests)]
+    return reqs, keys
+
+
+def _drain(cs, reqs, keys):
+    handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    cs.drain(jax.random.PRNGKey(9))
+    return handles
+
+
+# ----------------------------------------------------- token identity
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chunked_identical_to_unchunked(engine_pair, temperature):
+    """The acceptance bar: chunked prefill produces, per request,
+    IDENTICAL thinking tokens, step records and answers to unchunked
+    serving — greedy AND sampled (prefill consumes no PRNG keys and
+    lands the same KV at the same positions, just spread over ticks)."""
+    reqs, keys = _long_workload(seed=1)
+    ctrl = _mk_controller(engine_pair, temperature=temperature)
+    on = _drain(_mk_sched(ctrl, chunked=True), reqs, keys)
+    off = _drain(_mk_sched(ctrl, chunked=False), reqs, keys)
+    for h_on, h_off in zip(on, off):
+        assert h_on.result is not None and h_off.result is not None
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+        for a, b in zip(h_on.result.steps, h_off.result.steps):
+            assert (a.source, a.accepted, a.tokens) == \
+                (b.source, b.accepted, b.tokens)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chunked_spec_decode_identical(engine_pair, temperature):
+    """Chunked prefill under hierarchical speculation (batched
+    token-level spec decode): outputs and spec stats stay identical."""
+    reqs, keys = _long_workload(seed=2)
+    ctrl = _mk_controller(engine_pair, temperature=temperature, spec=True)
+    on = _drain(_mk_sched(ctrl, chunked=True), reqs, keys)
+    off = _drain(_mk_sched(ctrl, chunked=False), reqs, keys)
+    for h_on, h_off in zip(on, off):
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+        s_on, s_off = h_on.result.spec_stats, h_off.result.spec_stats
+        assert (s_on.proposed, s_on.accepted, s_on.rounds) == \
+            (s_off.proposed, s_off.accepted, s_off.rounds)
+
+
+def test_chunked_prefix_cache_identical_and_hits(engine_pair):
+    """Chunked prefill composes with the radix prefix cache: best-of-N
+    siblings defer across the cold request's MULTI-TICK chunked prefill
+    and then admit as full cache hits, with outputs identical to
+    cache-disabled chunked serving."""
+    rng = random.Random(7)
+    task = tasks.sample_task(rng, min_steps=10, max_steps=10)
+    pairs = expand_best_of_n([(task, jax.random.PRNGKey(0))], 3)
+    reqs = [t for t, _ in pairs]
+    keys = [k for _, k in pairs]
+    ctrl = _mk_controller(engine_pair, temperature=0.8)
+    on = _drain(_mk_sched(ctrl, chunked=True, prefix_cache=True),
+                reqs, keys)
+    off = _drain(_mk_sched(ctrl, chunked=True, prefix_cache=False),
+                 reqs, keys)
+    for h_on, h_off in zip(on, off):
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+    plen = len(tasks.question_tokens(task))
+    bs = 16
+    cacheable = (plen // bs) * bs
+    if cacheable == plen:
+        cacheable -= bs
+    assert on[0].cache_hit_tokens == 0
+    for h in on[1:]:
+        assert h.cache_hit_tokens == cacheable > 0
+
+
+def test_chunked_mid_prefill_preemption_recovers(engine_pair):
+    """A pool too small for the whole workload preempts mid-serve (often
+    mid-prefill — admission reserves blocks incrementally, so later
+    chunks can arrive after the pool filled) yet still finishes every
+    request with unchunked-identical outputs and empty pools."""
+    reqs, keys = _long_workload(n_requests=4, seed=3)
+    ctrl = _mk_controller(engine_pair)
+    off = _drain(_mk_sched(ctrl, chunked=False, prefix_cache=False),
+                 reqs, keys)
+    cs = _mk_sched(ctrl, chunked=True, kv_bytes=90_000, kv_fraction=0.5,
+                   prefix_cache=False)
+    handles = _drain(cs, reqs, keys)
+    assert cs.preemptions > 0
+    assert len(cs.done) == 4
+    for h_on, h_off in zip(handles, off):
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
+
+
+# ------------------------------------------------- stall-free scheduling
+
+
+def test_decode_never_stalls_behind_long_prefill(engine_pair):
+    """The stall-free property itself: while a long prompt's prefill is
+    chunking across ticks, an in-flight request keeps completing one
+    reasoning step per tick (its step trace grows every tick)."""
+    # a generous thinking budget keeps the running request reasoning for
+    # several ticks; a tiny chunk budget spreads the long prefill over
+    # ~14 ticks — the two windows must overlap
+    ctrl = _mk_controller(engine_pair, token_budget=96, max_steps=10)
+    cs = _mk_sched(ctrl, chunked=True, max_prefill_tokens=4)
+    rng = random.Random(5)
+    running = tasks.sample_task(rng, min_steps=5, max_steps=5)
+    long_t = tasks.sample_task(rng, min_steps=12, max_steps=12)
+    h_run = cs.submit(running, key=jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    # run until the in-flight request is through its (short) prefill
+    while not any(a.state.phase != "prefill" for a in cs.active):
+        key, sub = jax.random.split(key)
+        cs.tick(sub)
+    h_long = cs.submit(long_t, key=jax.random.PRNGKey(2))
+    a_run = next(a for a in cs.active if a.req is h_run)
+    saw_interleave = 0
+    for _ in range(32):
+        a_long = next((a for a in cs.active if a.req is h_long), None)
+        if h_run.result is not None or (
+                a_long is not None and a_long.state.phase != "prefill"):
+            break
+        steps_before = len(a_run.state.steps)
+        key, sub = jax.random.split(key)
+        cs.tick(sub)
+        a_long = next((a for a in cs.active if a.req is h_long), None)
+        if a_long is not None and a_long.state.phase == "prefill":
+            # a tick with the long prompt still mid-prefill...
+            assert 0 < a_long.cursor < len(a_long.prompt)
+            if len(a_run.state.steps) > steps_before:
+                # ...that ALSO advanced the running request's reasoning
+                saw_interleave += 1
+    assert saw_interleave >= 2, \
+        "no tick interleaved chunked prefill with in-flight decode"
+    cs.drain(key)
+    assert len(cs.done) == 2
+
+
+def test_chunk_count_and_latency_milestones(engine_pair):
+    """A lone long-prompt request chunks over ceil(suffix/budget) prefill
+    batches and stamps admission/prefill-done/first-token milestones in
+    order; summarize surfaces TTFT/TPOT/stall percentiles."""
+    reqs, keys = _long_workload(n_requests=1, seed=6, min_steps=12,
+                                max_steps=12)
+    ctrl = _mk_controller(engine_pair)
+    cs = _mk_sched(ctrl, chunked=True, max_prefill_tokens=16,
+                   prefix_cache=False)
+    handles = _drain(cs, reqs, keys)
+    suffix = len(tasks.question_tokens(reqs[0]))
+    assert cs.prefill_chunks >= -(-suffix // 16)
+    h = handles[0]
+    assert h.admitted_at is not None and h.prefill_done_at is not None
+    assert h.first_token_at is not None and h.finished_at is not None
+    assert h.admitted_at <= h.prefill_done_at <= h.first_token_at \
+        <= h.finished_at
+    assert h.ttft is not None and h.ttft > 0
+    assert h.prefill_stall_s is not None and h.prefill_stall_s >= 0
+    n_out = len(h.result.thinking_ids) + len(h.result.answer_ids)
+    assert h.tpot(n_out) is not None and h.tpot(n_out) > 0
+    stats = summarize(handles, 1.0)
+    for k in ("p50_ttft_s", "p95_ttft_s", "p50_tpot_s", "p95_tpot_s",
+              "mean_prefill_stall_s", "p95_prefill_stall_s"):
+        assert k in stats, k
+
+
+def test_verbose_events_logged(engine_pair):
+    """--verbose observability: admission, chunk progress and (here)
+    completion lines reach the on_event sink."""
+    reqs, keys = _long_workload(n_requests=1, seed=8, min_steps=12,
+                                max_steps=12)
+    events = []
+    ctrl = _mk_controller(engine_pair)
+    cs = _mk_sched(ctrl, chunked=True, max_prefill_tokens=16,
+                   on_event=events.append)
+    _drain(cs, reqs, keys)
+    assert any(e.startswith("admit ") and "chunked" in e for e in events)
+    assert any(e.startswith("prefill ") and "/" in e for e in events)
+    assert any(e.startswith("prefill ") and "done" in e for e in events)
+
+
+# ------------------------------------------------------- unit contracts
+
+
+def test_kv_chunk_blocks_partial_final_block():
+    """Incremental reservation sums to the monolithic reservation, chunk
+    boundaries landing mid-block included."""
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26),
+                   block_size=16)
+    # 45-token suffix in 16-token chunks from a 32-token cursor
+    total = 0
+    cursor = 32
+    for chunk in (16, 16, 13):
+        total += kv.chunk_blocks(cursor, chunk)
+        cursor += chunk
+    assert total == kv.chunk_blocks(32, 45) == -(-(32 + 45) // 16) - 2
+    # a chunk inside the partial tail claims no new block
+    assert kv.chunk_blocks(17, 10) == 0
+    assert kv.chunk_blocks(17, 15) == 0
+    assert kv.chunk_blocks(17, 16) == 1
+
+
+def test_prefill_rows_cursor_contract(engine_pair):
+    """prefill_rows refuses a chunk whose declared start offset is out of
+    sync with the row position — the bug class that would silently land
+    prompt tokens at the wrong offsets."""
+    from repro.serving.batch_engine import BatchEngine
+    base, _ = engine_pair
+    be = BatchEngine(base.model, base.params, batch=2, capacity=64)
+    r = be.alloc_row()
+    be.prefill_rows([r], [[tk.BOS, 5, 6, 7]], [0])
+    assert be.pos[r] == 4
+    be.prefill_rows([r], [[8, 9]], [4])          # continuation at cursor
+    assert be.pos[r] == 6
+    with pytest.raises(AssertionError, match="out of sync"):
+        be.prefill_rows([r], [[10]], [4])
+
+
+def test_max_prefill_tokens_validated(engine_pair):
+    ctrl = _mk_controller(engine_pair)
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    with pytest.raises(ValueError, match="max_prefill_tokens"):
+        ContinuousScheduler(ctrl, kv, max_prefill_tokens=0)

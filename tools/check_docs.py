@@ -1,0 +1,99 @@
+"""Docs CI check: every intra-repo markdown link in the documentation
+resolves (file exists; heading anchors match a real heading), and the
+README results table matches the checked-in BENCH_*.json artifacts.
+
+  python tools/check_docs.py
+
+Exits nonzero with a list of broken links / stale tables.  Run by the
+CI docs job; run it locally after editing README.md / DESIGN.md /
+benchmarks/README.md."""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md", "benchmarks/README.md", "ROADMAP.md",
+        "PAPER.md"]
+
+# [text](target) — excluding images and in-code examples is not needed:
+# a code span containing a literal ](...) pair is vanishingly rare here
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a markdown heading (approximation:
+    lowercase, drop everything but word chars/spaces/hyphens, spaces to
+    hyphens — matches the section names used in this repo)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set:
+    slugs = set()
+    with open(path) as f:
+        in_code = False
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if not in_code and line.startswith("#"):
+                slugs.add(github_slug(line.lstrip("#")))
+    return slugs
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOCS:
+        doc_path = os.path.join(ROOT, doc)
+        if not os.path.exists(doc_path):
+            errors.append(f"{doc}: documentation file missing")
+            continue
+        base = os.path.dirname(doc_path)
+        with open(doc_path) as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                resolved = os.path.normpath(os.path.join(base, path_part))
+                if not os.path.exists(resolved):
+                    errors.append(f"{doc}: broken link -> {target}")
+                    continue
+            else:
+                resolved = doc_path
+            if anchor and resolved.endswith(".md"):
+                if anchor not in heading_slugs(resolved):
+                    errors.append(f"{doc}: broken anchor -> {target}")
+    return errors
+
+
+def check_readme_table() -> list:
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "benchmarks", "readme_table.py"), "--check"],
+        capture_output=True, text=True)
+    if r.returncode != 0:
+        return [(r.stdout + r.stderr).strip()
+                or "readme_table.py --check failed"]
+    return []
+
+
+def main() -> int:
+    errors = check_links() + check_readme_table()
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}")
+        return 1
+    print(f"docs OK: links resolve in {', '.join(DOCS)}; README results "
+          f"table matches BENCH_*.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
