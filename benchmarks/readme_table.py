@@ -79,6 +79,14 @@ def build_table() -> str:
             f"(decode stall), {d['req_s_ratio']:.2f}x req/s, "
             f"{d['p95_ttft_ratio']:.2f}x p95 TTFT | "
             f"`BENCH_chunked.json` |")
+    d = _load("BENCH_overload.json")
+    if d:
+        rows.append(
+            f"| Overload resilience | {d['num_requests']}-request burst "
+            f"over {d['batch']} rows, deadline shedding + degradation "
+            f"ladder vs serve-all | **{d['goodput_ratio']:.2f}x** goodput "
+            f"(SLO-met req/s), {d['p95_tpot_ratio']:.2f}x p95 TPOT | "
+            f"`BENCH_overload.json` |")
     return "\n".join(rows)
 
 

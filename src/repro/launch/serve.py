@@ -45,6 +45,23 @@ The summary reports p50/p95 TTFT (time to first output token), TPOT
 (per-output-token latency) and prefill-stall time.  ``--verbose`` logs
 admission, per-chunk prefill progress and preemption events.
 
+**Overload resilience** (continuous scheduler): ``--deadline S`` gives
+every request a wall-clock deadline (expired requests are cancelled
+mid-flight with status ``timeout`` and their KV reclaimed),
+``--shed-policy priority`` sheds queued requests that cannot meet their
+deadline or overflow the queue (lowest priority first, best-of-N
+siblings whose group still has survivors preferred — the vote then runs
+over the survivors), ``--slo-tpot S`` feeds the overload controller and
+the goodput accounting, and ``--degrade`` enables the graceful
+speculation-degradation ladder (shrink gamma -> token-level spec off ->
+smaller prefill chunks -> no cache insertion, stepping back up with
+hysteresis).  ``--inject-faults SEED[:N]`` runs deterministic chaos
+(NaN logits / engine raises / pool exhaustion / stalled ticks;
+quarantine + one retry with speculation disabled), and ``--audit``
+verifies the pool-refcount / block-table / radix-cache invariants every
+tick.  The ``[resilience]`` line and per-request ``status=`` report the
+outcome mix.
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
@@ -70,8 +87,10 @@ from ..core.policies import StaticThreshold
 from ..data import tasks
 from ..data.evaluate import is_correct
 from ..sampling.sample import SamplingParams
+from ..serving.faults import FaultInjector, FaultPlan
 from ..serving.kv_manager import KVBudget, KVManager
 from ..serving.loader import load_testbed_engines
+from ..serving.resilience import ResilienceConfig
 from ..serving.scheduler import ContinuousScheduler
 from ..serving.workload import (expand_best_of_n, majority_vote,
                                 poisson_arrivals, run_workload, summarize)
@@ -144,12 +163,23 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
     ctrl = SpecReason(base, small, cfg)
     kv = KVManager(base.model.cfg, small.model.cfg,
                    KVBudget(total_bytes=args.kv_budget_mb << 20))
+    res_cfg = ResilienceConfig(slo_tpot_s=args.slo_tpot,
+                               shed_policy=args.shed_policy,
+                               degrade=args.degrade)
+    injector = None
+    if args.inject_faults:
+        seed, _, nf = args.inject_faults.partition(":")
+        injector = FaultInjector(FaultPlan.random(
+            seed=int(seed), n_faults=int(nf) if nf else 4,
+            n_requests=len(reqs) * args.num_samples, max_tick=8))
     sched = ContinuousScheduler(ctrl, kv, max_batch=args.batch,
                                 context_capacity=min(base.max_len,
                                                      args.budget + 64),
                                 prefix_cache=not args.no_prefix_cache,
                                 chunked_prefill=args.chunked_prefill,
                                 max_prefill_tokens=args.max_prefill_tokens,
+                                resilience=res_cfg, faults=injector,
+                                audit=args.audit,
                                 on_event=(lambda s: print(f"[sched] {s}"))
                                 if args.verbose else None)
     rng = random.Random(args.seed)
@@ -159,24 +189,38 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
         # best-of-N / self-consistency: every prompt becomes N sampled
         # reasoning chains whose prefills share one set of cached blocks
         pairs = expand_best_of_n(pairs, args.num_samples)
+    # per-request submit opts: deadline + best-of-N sibling group (the
+    # shed policy prefers victims whose group still has survivors)
+    opts = [{"deadline_s": args.deadline,
+             "group": f"task{i // args.num_samples}"
+             if args.num_samples > 1 else None}
+            for i in range(len(pairs))]
     arrivals = poisson_arrivals(len(pairs), args.arrival_rate, rng)
     t0 = time.perf_counter()
-    handles = run_workload(sched, pairs, arrivals)
+    handles = run_workload(sched, pairs, arrivals, opts=opts)
     wall = time.perf_counter() - t0
     tag = "hierspec" if args.spec_decode else "continuous"
     for i, h in enumerate(handles):
         res = h.result
+        if res is None:
+            # shed / timed out / failed: no output to grade, print the
+            # structured outcome instead
+            print(f"[{tag}] req{i}: --- status={h.status}"
+                  f" ({h.error if h.error else 'no error'})")
+            continue
         ok = is_correct(h.task, res.answer_ids)
         print(f"[{tag}] req{i}: {'OK ' if ok else 'BAD'} "
+              f"status={h.status} "
               f"lat={h.e2e_latency:.2f}s think={res.n_thinking_tokens}"
               f"{_spec_suffix(res)}{_cache_suffix(h)} "
               f"answer={tk.detok(res.answer_ids)}")
         if args.meters:
             for name, m in res.meters.items():
                 print(_meter_line(name, m))
-    stats = summarize(handles, wall)
+    stats = summarize(handles, wall, slo_tpot_s=args.slo_tpot)
+    graded = [h for h in handles if h.result is not None]
     accuracy = sum(is_correct(h.task, h.result.answer_ids)
-                   for h in handles) / max(len(handles), 1)
+                   for h in graded) / max(len(graded), 1)
     if args.vote:
         votes = majority_vote(handles, args.num_samples)
         for i, v in enumerate(votes):
@@ -210,6 +254,18 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
               f"prefill stall "
               f"mean={stats.get('mean_prefill_stall_s', 0.0):.3f}s "
               f"p95={stats.get('p95_prefill_stall_s', 0.0):.3f}s")
+    rs = sched.resilience_stats()
+    print(f"[resilience] goodput={stats['goodput_req_s']:.3f} req/s "
+          f"(slo_met={stats['slo_met']}/{len(handles)}) | "
+          f"timeout={rs['timeouts']} shed={rs['shed']} "
+          f"failed={rs['failed']} | quarantines={rs['quarantines']} "
+          f"retries={rs['retries']} stalled_ticks={rs['stalled_ticks']} | "
+          f"degrade_level={rs['level']} pressure={rs['pressure']:.2f} "
+          f"audit_violations={rs['audit_violations']}")
+    stats.update({f"resilience_{k}": v for k, v in rs.items()
+                  if k in ("timeouts", "shed", "failed", "quarantines",
+                           "retries", "stalled_ticks", "level",
+                           "audit_violations")})
     stats.update({f"cache_{w}_{k}": v
                   for w, s in sched.cache_stats().items()
                   for k, v in s.items() if k in ("hit_rate",
@@ -285,9 +341,54 @@ def main(argv=None):
     ap.add_argument("--verbose", action="store_true",
                     help="log admission / chunk-progress / preemption "
                          "scheduler events (continuous scheduler)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="continuous scheduler: per-request deadline in "
+                         "seconds — a request still unfinished this long "
+                         "after submission is cancelled with status "
+                         "'timeout' and its KV blocks reclaimed")
+    ap.add_argument("--slo-tpot", type=float, default=None,
+                    help="per-output-token latency SLO in seconds: feeds "
+                         "the overload controller's strain signal and the "
+                         "goodput accounting (an over-SLO completion does "
+                         "not count toward goodput)")
+    ap.add_argument("--shed-policy", choices=("none", "priority"),
+                    default="none",
+                    help="overload shedding: 'priority' sheds queued "
+                         "requests (lowest priority first, best-of-N "
+                         "siblings with surviving group members "
+                         "preferred) when a request cannot meet its "
+                         "deadline or the queue exceeds capacity; "
+                         "'none' never sheds (default)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="enable the graceful speculation-degradation "
+                         "ladder: under sustained pressure the scheduler "
+                         "steps down gamma -> token-level spec off -> "
+                         "smaller prefill chunks -> no cache insertion, "
+                         "and back up with hysteresis")
+    ap.add_argument("--inject-faults", default=None, metavar="SEED[:N]",
+                    help="deterministic chaos mode: inject N (default 4) "
+                         "seeded faults (NaN logits, engine raise, pool "
+                         "exhaustion, stalled tick) into the run; faulted "
+                         "requests are quarantined and retried once with "
+                         "speculation disabled")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the per-tick invariant audits (pool "
+                         "refcount ledger, block-table consistency, "
+                         "radix-cache agreement); any violation raises")
     args = ap.parse_args(argv)
     if args.max_prefill_tokens < 1:
         ap.error("--max-prefill-tokens must be >= 1")
+    for flag, name in ((args.deadline, "--deadline"),
+                       (args.slo_tpot, "--slo-tpot")):
+        if flag is not None and flag <= 0:
+            ap.error(f"{name} must be > 0")
+    if args.scheduler != "continuous" and (
+            args.deadline is not None or args.slo_tpot is not None
+            or args.shed_policy != "none" or args.degrade
+            or args.inject_faults or args.audit):
+        ap.error("--deadline/--slo-tpot/--shed-policy/--degrade/"
+                 "--inject-faults/--audit ride on the continuous "
+                 "scheduler; add --scheduler continuous")
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "
                  "only; drop --scheme or use the sequential scheduler")

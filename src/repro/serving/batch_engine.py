@@ -127,6 +127,16 @@ class BatchEngine:
         """Rows currently available to `alloc_row`."""
         return len(self._free)
 
+    def rows_finite(self, rows: Sequence[int]) -> List[bool]:
+        """Whether each row's host-side ``last_logits`` are all finite —
+        the scheduler's per-tick health scan: a NaN/Inf row (a corrupted
+        engine step, or serving/faults.py's ``nan_logits`` injection)
+        must be quarantined before anything samples from it."""
+        if not rows:
+            return []
+        return np.isfinite(
+            self.last_logits[list(rows)]).all(axis=1).tolist()
+
     def snapshot_row(self, row: int) -> RowSnapshot:
         """O(1) rollback point (position + its logits); restore with
         `restore_row`.  Valid as long as the row is not freed — the

@@ -84,6 +84,16 @@ class Meter:
     cache_hit_tokens: int = 0
     cache_lookup_tokens: int = 0
     cache_evictions: int = 0
+    # resilience (serving.scheduler failure lifecycle): requests that hit
+    # their deadline / were shed by overload policy, plus fault-guard
+    # quarantines and the retries they spawned — mirrored onto the BASE
+    # engine's meter by the continuous scheduler so the per-result meter
+    # snapshots carry the run's failure counters
+    req_timeouts: int = 0
+    req_shed: int = 0
+    req_quarantines: int = 0
+    req_retries: int = 0
+    req_failed: int = 0
 
     @property
     def cache_hit_rate(self) -> float:

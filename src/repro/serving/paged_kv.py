@@ -75,6 +75,13 @@ class PagedKVPool:
     def refcount(self, block: int) -> int:
         return int(self._ref[block])
 
+    def refcounts(self) -> np.ndarray:
+        """Copy of the per-block refcount array — the ground truth the
+        fault-injection audits reconcile against the holders they can
+        enumerate (live sequences, snapshots, cached prefixes, injected
+        holds); see serving/faults.py."""
+        return self._ref.copy()
+
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return cdiv(n_tokens, self.block_size)
 

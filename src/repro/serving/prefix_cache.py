@@ -187,6 +187,16 @@ class RadixCache:
         self._clock += 1
         return self._clock
 
+    def iter_nodes(self):
+        """Every cached node, root excluded (traversal order is
+        unspecified) — the surface the fault-injection audits walk to
+        reconcile the cache's pool references (serving/faults.py)."""
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
     def _walk(self, tokens: Sequence[int]) -> List[_Node]:
         """Longest cached block-aligned chain for ``tokens`` (no LRU
         touch, no stats)."""

@@ -71,7 +71,19 @@ is token-identical per request to unchunked serving — greedy, sampled,
 spec-decode and prefix-cache modes (tested in tests/test_chunked.py).
 
 Per-request greedy-token equivalence with the sequential regime is tested
-in tests/test_serving.py (same tokens, same steps, same answers)."""
+in tests/test_serving.py (same tokens, same steps, same answers).
+
+**Failure model** (serving/resilience.py, serving/faults.py): every
+request carries a terminal ``status`` in {ok, timeout, shed, failed} with
+a structured error; deadlines cancel rows mid-flight (mid-chunked-prefill
+and mid-spec-verification included) through an idempotent release path;
+an overload controller (per-tick EWMAs of TPOT/TTFT + pool occupancy)
+drives an admission throttle, a priority/best-of-N-aware shed policy and
+a speculation-degradation ladder with hysteresis; fault guards quarantine
+poisoned rows (NaN logits, raised engine calls), retry once without
+speculation, and fail with a structured error on the second hit —
+per-tick refcount-ledger audits verify nothing leaks (DESIGN.md §Failure
+model; chaos suite in tests/test_resilience.py)."""
 
 from __future__ import annotations
 
@@ -91,10 +103,16 @@ from ..core.verifier import mean_body_logprob
 from ..data.tasks import Task, question_tokens
 from ..tokenizer import toy as tk
 from .batch_engine import BatchEngine, RowSnapshot
+from .faults import (AuditViolation, FaultInjector, InjectedEngineError,
+                     audit_scheduler)
 from .kv_manager import KVManager
 from .paged_kv import (BlockTableSnapshot, PagedKVPool, PagedSeq,
                        PoolExhausted)
 from .prefix_cache import PrefixKVStore, RadixCache
+from .resilience import (STATUS_FAILED, STATUS_OK, STATUS_SHED,
+                         STATUS_TIMEOUT, TERMINAL_STATUSES,
+                         OverloadController, RequestError, ResilienceConfig,
+                         TickConfig)
 from .spec_engine import BatchSpecEngine, SpecLedger, SpecRow
 
 
@@ -112,6 +130,25 @@ class Request:
     key: Optional[jax.Array] = None
     result: Optional[SpecReasonResult] = None
     finished_at: Optional[float] = None
+    # failure lifecycle (serving/resilience.py): "queued" -> "running" ->
+    # one of the terminal outcomes ok | timeout | shed | failed, with a
+    # structured error for every non-ok terminal.  ``deadline_s`` is a
+    # wall-clock budget from submission (None = no deadline); higher
+    # ``priority`` requests admit first and shed last; ``group`` marks
+    # best-of-N sibling samples (the shed policy prefers dropping a
+    # sample whose group keeps survivors — the vote runs over survivors)
+    status: str = "queued"
+    error: Optional[RequestError] = None
+    deadline_s: Optional[float] = None
+    priority: int = 0
+    group: Optional[str] = None
+    # submission order (the fault plan's targeting key) and the fault-
+    # guard retry state: ``retries`` counts quarantine readmissions,
+    # ``quarantined`` routes every later decode through the plain
+    # (speculation-free) path
+    arrival_idx: int = -1
+    retries: int = 0
+    quarantined: bool = False
     # why the scheduler could not (yet) run this request: admission block
     # ("blocked: need N..., have M...") or preemption — surfaced instead of
     # an opaque None
@@ -162,6 +199,20 @@ class Request:
         return (self.finished_at - self.first_token_at) \
             / max(n_output_tokens - 1, 1)
 
+    @property
+    def terminal(self) -> bool:
+        """True once the request reached a terminal outcome (ok /
+        timeout / shed / failed) — the drive-loop completion test
+        (``result is not None`` misses the failure outcomes)."""
+        return self.status in TERMINAL_STATUSES
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        """True when the request's wall-clock deadline has passed."""
+        if self.deadline_s is None:
+            return False
+        now = time.perf_counter() if now is None else now
+        return now - self.submitted_at > self.deadline_s
+
 
 class Scheduler:
     """Admission-controlled FIFO over a SpecReason engine pair (the
@@ -175,9 +226,12 @@ class Scheduler:
         self.queue: Deque[Request] = deque()
         self.done: List[Request] = []
 
-    def submit(self, task: Task, key: Optional[jax.Array] = None) -> Request:
+    def submit(self, task: Task, key: Optional[jax.Array] = None,
+               deadline_s: Optional[float] = None, priority: int = 0,
+               group: Optional[str] = None) -> Request:
         """Queue a task FIFO; returns its Request handle."""
-        req = Request(task, key=key)
+        req = Request(task, key=key, deadline_s=deadline_s,
+                      priority=priority, group=group)
         self.queue.append(req)
         return req
 
@@ -196,6 +250,17 @@ class Scheduler:
         regime).  Returns the finished request, or None if the queue is
         empty / admission is blocked — in which case the queued request
         carries ``blocked_reason`` ("blocked: need N tokens, have M")."""
+        # expired requests terminate with a structured timeout instead of
+        # being served past their deadline (the sequential regime's slice
+        # of the failure lifecycle — no mid-flight cancellation here)
+        while self.queue and self.queue[0].expired():
+            req = self.queue.popleft()
+            req.status = STATUS_TIMEOUT
+            req.error = RequestError(
+                "deadline", f"deadline {req.deadline_s:g}s exceeded "
+                f"while queued")
+            req.finished_at = time.perf_counter()
+            self.done.append(req)
         if not self.queue:
             return None
         req = self.queue[0]
@@ -216,6 +281,7 @@ class Scheduler:
             req.result = self.controller.run(question_tokens(req.task),
                                              req.key if req.key is not None
                                              else key)
+            req.status = STATUS_OK
             req.finished_at = time.perf_counter()
         finally:
             self.kv.release(req.request_id + ":b")
@@ -291,7 +357,15 @@ class _SchedulerLedger(SpecLedger):
         self.acts = acts
 
     def alive(self, i: int) -> bool:
-        return self.acts[i].alive
+        # deadline checks ride the engine's liveness probes: a request
+        # whose deadline lands in the middle of a multi-round spec
+        # verification cancels BETWEEN rounds (its blocks released, the
+        # engine drops the row like any preemption) rather than running
+        # the decode to completion first
+        a = self.acts[i]
+        if a.alive:
+            self.sched._check_deadline(a)
+        return a.alive
 
     def grow(self, i: int, which: str, n_tokens: int) -> None:
         a = self.acts[i]
@@ -345,7 +419,10 @@ class ContinuousScheduler:
                  cache_blocks: Optional[int] = None,
                  chunked_prefill: bool = True,
                  max_prefill_tokens: int = DEFAULT_MAX_PREFILL_TOKENS,
-                 on_event: Optional[Callable[[str], None]] = None):
+                 on_event: Optional[Callable[[str], None]] = None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 faults: Optional[FaultInjector] = None,
+                 audit: bool = False):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -413,17 +490,46 @@ class ContinuousScheduler:
         self.preemptions = 0
         self.ticks = 0
         self.prefill_chunks = 0      # chunked-prefill batches dispatched
+        # resilience: the overload controller folds per-tick signals into
+        # a pressure scalar and walks the degradation ladder; a default
+        # (inert) config keeps the exact pre-resilience behaviour.  The
+        # fault injector and the per-tick invariant audits are debug
+        # machinery — both off in production serving.
+        self.res_cfg = resilience if resilience is not None \
+            else ResilienceConfig()
+        self.res = OverloadController(self.res_cfg, TickConfig(
+            gamma=self.gamma, spec_decode=self.spec,
+            max_prefill_tokens=max_prefill_tokens, cache_insert=True))
+        self.faults = faults
+        self.audit_enabled = audit
+        self._submitted = 0          # arrival_idx assignment
+        self.timeouts = 0            # requests past deadline
+        self.shed_requests = 0       # dropped by the shed policy
+        self.quarantines = 0         # fault-guard hits
+        self.retries = 0             # quarantine readmissions
+        self.failures = 0            # terminal ``failed`` outcomes
+        self.stalled_ticks = 0       # injected stall ticks
+        self.audit_violations = 0    # should stay 0; audits raise
         # one compiled batched key split per tick phase (an un-jitted vmap
         # would retrace per call; a per-request host split would dispatch
         # per request)
         self._split_jit = jax.jit(jax.vmap(jax.random.split))
 
     # ------------------------------------------------------------- intake
-    def submit(self, task: Task, key: Optional[jax.Array] = None) -> Request:
+    def submit(self, task: Task, key: Optional[jax.Array] = None,
+               deadline_s: Optional[float] = None, priority: int = 0,
+               group: Optional[str] = None) -> Request:
         """Queue a task; returns its Request handle (admission happens
         at the next tick, subject to rows/blocks).  ``key`` pins the
-        request's PRNG chain — same key, same tokens, any scheduler."""
-        req = Request(task, key=key)
+        request's PRNG chain — same key, same tokens, any scheduler.
+        ``deadline_s`` is a wall-clock budget from submission (expiry
+        cancels the request mid-flight with status ``timeout``);
+        ``priority`` orders admission and protects against shedding;
+        ``group`` marks best-of-N siblings for the shed policy."""
+        req = Request(task, key=key, deadline_s=deadline_s,
+                      priority=priority, group=group,
+                      arrival_idx=self._submitted)
+        self._submitted += 1
         self.queue.append(req)
         return req
 
@@ -471,7 +577,8 @@ class ContinuousScheduler:
         if self.on_event is not None:
             self.on_event(msg)
 
-    def _admit(self, key: jax.Array) -> None:
+    def _admit(self, key: jax.Array, tc: TickConfig,
+               quota: Optional[int] = None) -> None:
         admitted: List[_Active] = []
         # prompts that will newly insert cache blocks (wait-for-prefix: a
         # queued request whose cacheable prefix one of these inserts will
@@ -493,11 +600,18 @@ class ContinuousScheduler:
         loads: Dict[str, Tuple[List[int], List[List[int]]]] = {
             "base": ([], []), "small": ([], [])}
         bs = self.kv.block_size
-        idx = 0
-        while idx < len(self.queue):
+        # admission order: highest priority first, FIFO within a priority
+        # class (stable — preempted/quarantined requeues sit at the queue
+        # head, so they stay first among equals).  A blocked candidate
+        # breaks the loop: lower-ordered requests never jump a blocked
+        # one, which is what bounds every request's wait.
+        order = [r for _, r in sorted(
+            enumerate(self.queue), key=lambda t: (-t[1].priority, t[0]))]
+        for req in order:
+            if quota is not None and len(admitted) >= quota:
+                break
             if not (self.base_be.free_rows and self.small_be.free_rows):
                 break
-            req = self.queue[idx]
             prompt = question_tokens(req.task)
             # a request whose worst-case context cannot fit an engine row
             # is refused HERE with a clear error, not with a mid-serve
@@ -529,7 +643,6 @@ class ContinuousScheduler:
                     self._log(f"defer {req.request_id}: waiting for "
                               f"shared prefix insert (hit {cached}"
                               f"/{cacheable} cacheable tokens)")
-                    idx += 1
                     continue
             # chunked prefill reserves blocks INCREMENTALLY: admission
             # claims only the first chunk's blocks (+ headroom); each
@@ -538,7 +651,7 @@ class ContinuousScheduler:
             # Unchunked admission reserves the whole suffix up front.
             first = len(prompt) - cached
             if self.chunked:
-                first = min(first, self.max_prefill_tokens)
+                first = min(first, tc.max_prefill_tokens)
             need = self.kv.chunk_blocks(cached, first) \
                 + self._headroom_blocks()
             # each pool must cover at least one context_capacity-sized
@@ -597,8 +710,9 @@ class ContinuousScheduler:
                     f"blocked: need {need} {w} blocks, have "
                     f"{self.pools[w].num_free}" for w in short)
                 break
-            del self.queue[idx]
+            self.queue.remove(req)
             req.blocked_reason = None
+            req.status = "running"
             req.admitted_at = time.perf_counter()
             req.prefill_done_at = None      # re-set when THIS admission's
             a.prompt = list(prompt)         # (possibly chunked) prefill
@@ -651,7 +765,7 @@ class ContinuousScheduler:
                 self.active.append(a)
 
     # ----------------------------------------------------------- prefill
-    def _prefill_tick(self) -> None:
+    def _prefill_tick(self, tc: TickConfig) -> None:
         """The tick's bounded chunked-prefill batch: advance every
         mid-prefill row by its next chunk, FIFO over admission order,
         spending at most ``max_prefill_tokens`` prompt tokens per tick
@@ -664,10 +778,12 @@ class ContinuousScheduler:
         chunks on readmission and wait-for-prefix siblings admit as hits
         as soon as the cold prefill lands).  A request whose cursor
         reaches its prompt end enters the controller's think phase."""
-        acts = [a for a in self.active if a.state.phase == "prefill"]
+        acts = self._guard("prefill",
+                           [a for a in self.active
+                            if a.state.phase == "prefill"])
         if not acts:
             return
-        budget = self.max_prefill_tokens if self.chunked else None
+        budget = tc.max_prefill_tokens if self.chunked else None
         # FCFS budget packing (vLLM/Sarathi-style): the oldest mid-prefill
         # row takes as much of the tick's budget as it needs, younger rows
         # pack into the leftover.  Completion ORDER therefore matches
@@ -710,7 +826,11 @@ class ContinuousScheduler:
         bs = self.kv.block_size
         for a, take in chunks:
             a.cursor += take
-            if self.caches is not None:
+            # cache_insert=False is the degradation ladder's deepest rung
+            # short of plain SpecReason: under pressure, stop spending
+            # store slots + export dispatches on caching fresh prefixes
+            # (lookups still serve existing entries; outputs unchanged)
+            if self.caches is not None and tc.cache_insert:
                 # cache every full prompt block not already cached: the
                 # cache retains the sequence's blocks (shared from here
                 # on) and copies their KV out of the freshly prefilled
@@ -759,6 +879,14 @@ class ContinuousScheduler:
                 victim = next((v for v in reversed(self.active)
                                if v is not a and v.alive), None)
                 if victim is None:
+                    if self.faults is not None \
+                            and self.faults.holding(which):
+                        # TRANSIENT exhaustion (an injected hold owns the
+                        # pool): requeue this request for recompute once
+                        # the hold releases instead of crashing — genuine
+                        # single-request-too-big is refused at admission
+                        self._preempt(a)
+                        return
                     raise RuntimeError(
                         f"{which} KV pool exhausted by a single request "
                         f"({self.pools[which].num_blocks} blocks, "
@@ -769,6 +897,7 @@ class ContinuousScheduler:
     def _preempt(self, victim: _Active) -> None:
         self._release(victim)
         victim.req.blocked_reason = "preempted: KV block pool exhausted"
+        victim.req.status = "queued"
         self.queue.appendleft(victim.req)
         self.preemptions += 1
         mid = f" (mid-prefill at {victim.cursor}/{len(victim.prompt)})" \
@@ -777,6 +906,18 @@ class ContinuousScheduler:
                   f"exhausted{mid}; requeued for recompute")
 
     def _release(self, a: _Active) -> None:
+        """Release everything an admitted request holds: outstanding
+        block-table snapshots, both paged sequences (their own block
+        references only — shared cache/snapshot references survive, so a
+        cached-hit-seeded row derefs its adopted radix blocks exactly
+        once) and both engine rows.  IDEMPOTENT: cancellation paths can
+        race (a deadline sweep, a fault quarantine and a preemption may
+        all target one row in one tick) and a double release would
+        corrupt the pool's refcount ledger — ``alive`` is the
+        exactly-once latch."""
+        if not a.alive:
+            return
+        a.alive = False
         for snap, seq in ((a.b_seq_snap, a.base_seq),
                           (a.s_seq_snap, a.small_seq)):
             if snap is not None:
@@ -786,8 +927,191 @@ class ContinuousScheduler:
         a.small_seq.free()
         self.base_be.free_row(a.base_row)
         self.small_be.free_row(a.small_row)
-        a.alive = False
         self.active = [x for x in self.active if x is not a]
+
+    # ------------------------------------------------ failure lifecycle
+    def _finalize(self, req: Request, status: str, code: str,
+                  message: str) -> None:
+        """Stamp a terminal non-ok outcome and move the request to
+        ``done`` (the caller has already detached it from queue/active)."""
+        req.status = status
+        req.error = RequestError(code, message, self.ticks)
+        req.finished_at = time.perf_counter()
+        req.blocked_reason = None
+        self.done.append(req)
+        if status == STATUS_TIMEOUT:
+            self.timeouts += 1
+            self.base_be.meter.req_timeouts += 1
+        elif status == STATUS_SHED:
+            self.shed_requests += 1
+            self.base_be.meter.req_shed += 1
+        elif status == STATUS_FAILED:
+            self.failures += 1
+            self.base_be.meter.req_failed += 1
+        self._log(f"{status} {req.request_id}: {message}")
+
+    def _cancel(self, a: _Active, status: str, code: str,
+                message: str) -> None:
+        """Cancel an in-flight request mid-whatever-it-is-doing
+        (chunked prefill, spec verification, decode) — release its pool
+        blocks / block tables / radix references idempotently and stamp
+        the terminal outcome."""
+        if not a.alive:
+            return
+        self._release(a)
+        self._finalize(a.req, status, code, message)
+
+    def _check_deadline(self, a: _Active) -> None:
+        """Mid-flight deadline check — called from tick sweeps AND from
+        the spec ledger's ``alive`` callback, so a deadline landing in
+        the middle of a multi-round spec verification cancels the row
+        between rounds instead of after the whole decode."""
+        if a.alive and a.req.expired():
+            self._cancel(a, STATUS_TIMEOUT, "deadline",
+                         f"deadline {a.req.deadline_s:g}s exceeded "
+                         f"mid-flight (phase {a.state.phase})")
+
+    def _expire_deadlines(self) -> None:
+        now = time.perf_counter()
+        for a in list(self.active):
+            self._check_deadline(a)
+        for req in [r for r in self.queue if r.expired(now)]:
+            self.queue.remove(req)
+            self._finalize(req, STATUS_TIMEOUT, "deadline",
+                           f"deadline {req.deadline_s:g}s exceeded "
+                           f"while queued")
+
+    def _group_survivors(self, req: Request) -> int:
+        """How many OTHER members of ``req``'s best-of-N group are still
+        viable (queued, in flight, or finished ok) — the shed policy
+        keeps at least ``min_group_survivors`` so the vote still has
+        ballots."""
+        if req.group is None:
+            return 0
+        return (sum(1 for r in self.queue
+                    if r is not req and r.group == req.group)
+                + sum(1 for a in self.active if a.req.group == req.group)
+                + sum(1 for r in self.done
+                      if r.group == req.group and r.status == STATUS_OK))
+
+    def _shed_victim(self) -> Optional[Request]:
+        """Shed order: lowest priority first; within a priority class,
+        best-of-N sibling samples whose group keeps enough survivors go
+        before singletons (vote over survivors — dropping a ballot beats
+        dropping a whole request); youngest first breaks the final tie
+        (LIFO protects the oldest waiters' FIFO position)."""
+        cfg = self.res_cfg
+        best, best_key = None, None
+        for i, r in enumerate(self.queue):
+            covered = r.group is not None \
+                and self._group_survivors(r) >= cfg.min_group_survivors
+            sort_key = (r.priority, 0 if covered else 1, -i)
+            if best_key is None or sort_key < best_key:
+                best, best_key = r, sort_key
+        return best
+
+    def _shed(self) -> None:
+        """The tick's shed pass (policy "priority"): drop queued requests
+        that can no longer convert capacity into goodput — first the
+        deadline-infeasible (remaining budget below the EWMA service
+        time), then, while the queue sits above ``max_queue``, the shed
+        order above."""
+        cfg = self.res_cfg
+        if cfg.shed_policy == "none" or not self.queue:
+            return
+        now = time.perf_counter()
+        for req in [r for r in self.queue if r.deadline_s is not None]:
+            remaining = req.deadline_s - (now - req.submitted_at)
+            if self.res.infeasible(remaining):
+                self.queue.remove(req)
+                self._finalize(req, STATUS_SHED, "shed_infeasible",
+                               f"remaining deadline budget "
+                               f"{remaining:.3f}s below the estimated "
+                               f"service time")
+        while cfg.max_queue is not None \
+                and len(self.queue) > cfg.max_queue:
+            victim = self._shed_victim()
+            if victim is None:
+                break
+            self.queue.remove(victim)
+            self._finalize(victim, STATUS_SHED, "shed_overload",
+                           f"queue depth {len(self.queue) + 1} above "
+                           f"max_queue={cfg.max_queue}")
+
+    # -------------------------------------------------- fault guards
+    def _guard(self, phase: str, acts: List[_Active]) -> List[_Active]:
+        """Wrap a phase batch against injected engine-call failures: a
+        ``raise`` fault targeting a row in this batch fires BEFORE the
+        engine call (no state mutated, no PRNG keys burned); the guard
+        quarantines exactly that row and the rest of the batch
+        proceeds."""
+        if self.faults is None or not acts:
+            return [a for a in acts if a.alive]
+        while True:
+            try:
+                self.faults.maybe_raise(phase,
+                                        [a.req for a in acts if a.alive])
+                break
+            except InjectedEngineError as e:
+                victim = next(a for a in acts
+                              if a.req.request_id == e.request_id)
+                self._quarantine(victim, "engine_error", str(e))
+        return [a for a in acts if a.alive]
+
+    def _quarantine(self, a: _Active, code: str, message: str) -> None:
+        """The fault-guard contract: first hit releases the poisoned row
+        and requeues the request for a speculation-free recompute
+        (deterministic — the pinned key replays the same tokens); a hit
+        past ``max_retries`` terminates it with a structured ``failed``."""
+        if not a.alive:
+            return
+        req = a.req
+        self.quarantines += 1
+        self.base_be.meter.req_quarantines += 1
+        if req.retries >= self.res_cfg.max_retries:
+            self._cancel(a, STATUS_FAILED, code,
+                         f"{message} (retries exhausted after "
+                         f"{req.retries})")
+            return
+        req.retries += 1
+        self.retries += 1
+        self.base_be.meter.req_retries += 1
+        req.quarantined = True
+        self._release(a)
+        req.status = "queued"
+        req.blocked_reason = f"quarantined: {code}; retrying without " \
+                             f"speculation"
+        self.queue.appendleft(req)
+        self._log(f"quarantine {req.request_id}: {code} — requeued, "
+                  f"speculation disabled (retry {req.retries})")
+
+    def _health_scan(self) -> None:
+        """Per-tick engine-health guard: any live row whose host-side
+        last_logits went non-finite (a corrupted engine step — or the
+        fault injector's nan_logits) is quarantined before the next tick
+        samples from it."""
+        acts = [a for a in self.active if a.alive]
+        if not acts:
+            return
+        ok_b = self.base_be.rows_finite([a.base_row for a in acts])
+        ok_s = self.small_be.rows_finite([a.small_row for a in acts])
+        for a, fb, fs in zip(acts, ok_b, ok_s):
+            if not (fb and fs):
+                which = "base" if not fb else "small"
+                self._quarantine(a, "nan_logits",
+                                 f"non-finite logits in the {which} "
+                                 f"engine row")
+
+    def _audit(self) -> None:
+        """Per-tick invariant audit (``audit=True``): reconcile the pool
+        refcount ledgers, block tables and radix cache against every
+        enumerable holder; any divergence raises AuditViolation (a leak
+        or double-free would otherwise surface as a far-away crash)."""
+        viols = audit_scheduler(self)
+        if viols:
+            self.audit_violations += len(viols)
+            raise AuditViolation(
+                f"tick {self.ticks}: " + "; ".join(viols))
 
     # -------------------------------------------------------------- tick
     def tick(self, key: jax.Array) -> bool:
@@ -796,29 +1120,76 @@ class ContinuousScheduler:
         current phase as per-phase batched calls.  Returns True while
         there is work left."""
         self.ticks += 1
-        self._admit(key)
-        # Stall-free scheduling: the tick's prefill work is bounded by
-        # max_prefill_tokens (chunked mode), so the decode/speculation
-        # phases below run EVERY tick regardless of how long the queued
-        # prompts are — a long admission never starves in-flight decodes.
-        self._prefill_tick()
-        # One tick = one reasoning step for every in-flight request: each
-        # phase batch is collected FRESH so a request drafted this tick is
-        # verified this tick (and, on reject, regenerated this tick) —
-        # requests stay phase-synchronized and every batched call is full.
-        # Call structure per tick: one small-model fused decode (every
-        # drafting request), one base-model scoring prefill (every
-        # verifying request), one base-model extend (accepted-step
-        # delimiters + </think> closers, deferred and merged), one
-        # base-model fused decode (fallback regenerations + final answers,
-        # distinguished by per-row stop sets), one small-model sync extend.
-        self._phase_acts("speculate", self._speculate_batch)
-        self._phase_acts("verify", self._verify_batch)
-        self._flush_close_batch()
-        fall = [a for a in self.active if a.state.phase == "fallback"]
-        ans = [a for a in self.active if a.state.phase == "answer"]
-        if fall or ans:
-            self._base_decode_batch(fall, ans)
+        # fault injection first: arm this tick's plan entries (pool holds
+        # claim/release, stall windows open) so the rest of the tick sees
+        # them; a stalled tick skips admission/prefill/phases but still
+        # runs deadline expiry, health scanning and audits — a stalled
+        # engine must never stall the failure lifecycle
+        stalled = False
+        if self.faults is not None:
+            stalled = self.faults.begin_tick(self.ticks, self)
+            if stalled:
+                self.stalled_ticks += 1
+        # failure lifecycle sweeps: expire deadlines (queued AND
+        # mid-flight — cancellation releases blocks/tables/radix refs
+        # idempotently), then shed what can no longer make its SLO
+        self._expire_deadlines()
+        self._shed()
+        # overload controller: fold this tick's signals into pressure and
+        # walk the degradation ladder (hysteresis); the resulting tick
+        # config drives gamma / spec / prefill budget / cache insertion
+        occ = max(p.num_used / p.num_blocks for p in self.pools.values())
+        # row pressure is DEMAND vs capacity (busy rows plus waiting
+        # arrivals), not instantaneous occupancy: this sweep runs before
+        # admission, so a row freed by last tick's finish would read as
+        # idle here even while the queue is about to refill it — the
+        # demand form stays pinned at 1.0 for as long as arrivals
+        # genuinely exceed the row budget
+        busy = self.base_be.batch - min(self.base_be.free_rows,
+                                        self.small_be.free_rows)
+        rows_busy = min(1.0, (busy + len(self.queue)) / self.base_be.batch)
+        for ev in self.res.observe_tick(self.ticks, occ, rows_busy,
+                                        len(self.queue)):
+            self._log(ev)
+        tc = self.res.tick_config()
+        if not stalled:
+            self._admit(key, tc,
+                        quota=self.res.admit_quota(len(self.active)))
+            # Stall-free scheduling: the tick's prefill work is bounded
+            # by the tick config's prefill budget (chunked mode), so the
+            # decode/speculation phases below run EVERY tick regardless
+            # of how long the queued prompts are — a long admission
+            # never starves in-flight decodes.
+            self._prefill_tick(tc)
+            # One tick = one reasoning step for every in-flight request:
+            # each phase batch is collected FRESH so a request drafted
+            # this tick is verified this tick (and, on reject,
+            # regenerated this tick) — requests stay phase-synchronized
+            # and every batched call is full.  Call structure per tick:
+            # one small-model fused decode (every drafting request), one
+            # base-model scoring prefill (every verifying request), one
+            # base-model extend (accepted-step delimiters + </think>
+            # closers, deferred and merged), one base-model fused decode
+            # (fallback regenerations + final answers, distinguished by
+            # per-row stop sets), one small-model sync extend.
+            self._phase_acts("speculate", self._speculate_batch)
+            self._phase_acts("verify", self._verify_batch)
+            self._flush_close_batch()
+            fall = self._guard("fallback",
+                               [a for a in self.active
+                                if a.state.phase == "fallback"])
+            ans = self._guard("answer",
+                              [a for a in self.active
+                               if a.state.phase == "answer"])
+            if fall or ans:
+                self._base_decode_batch(fall, ans, tc)
+        # engine-health guard: injected NaN poisoning lands here
+        # (simulating this tick's engine step having corrupted a row),
+        # then the scan quarantines every non-finite row BEFORE finish
+        # packaging or the next tick's sampling can consume it
+        if self.faults is not None:
+            self.faults.poison(self)
+        self._health_scan()
         # TTFT bookkeeping: the first tick that left output tokens in a
         # request's trace stamps its first-token time (tick-granular —
         # the batched calls do not expose per-token host timestamps)
@@ -828,10 +1199,19 @@ class ContinuousScheduler:
                                                  a.state.answer_ids):
                 a.req.first_token_at = now
         self._finish()
-        return bool(self.active or self.queue)
+        if self.audit_enabled:
+            self._audit()
+        working = bool(self.active or self.queue)
+        if not working and self.faults is not None:
+            # end of run: drop any pool holds whose expiry tick the
+            # workload never reached, so drained pools reconcile to zero
+            # regardless of where the fault plan ended
+            self.faults.release_all(self)
+        return working
 
     def _phase_acts(self, phase: str, fn) -> None:
-        acts = [a for a in self.active if a.state.phase == phase]
+        acts = self._guard(phase, [a for a in self.active
+                                   if a.state.phase == phase])
         if acts:
             fn(acts)
 
@@ -850,7 +1230,20 @@ class ContinuousScheduler:
                   "small": self.small_be.meter.as_dict()}
         for a in [x for x in self.active if x.state.phase == "done"]:
             a.req.result = self.controller.result(a.state, meters=meters)
+            a.req.status = STATUS_OK
             a.req.finished_at = time.perf_counter()
+            n_out = len(a.req.result.thinking_ids) \
+                + len(a.req.result.answer_ids)
+            # service estimate = admission -> finish (EXECUTION time, not
+            # e2e): feasibility shedding compares a queued request's
+            # remaining deadline budget against this, and folding queue
+            # wait into the estimate would feed back on itself under
+            # overload (each slow finisher inflates the estimate that
+            # sheds the next waiter)
+            service = a.req.finished_at - a.req.admitted_at \
+                if a.req.admitted_at is not None else a.req.e2e_latency
+            self.res.observe_finish(a.req.ttft, a.req.tpot(n_out),
+                                    service)
             self.done.append(a.req)
             self._release(a)
 
@@ -952,17 +1345,24 @@ class ContinuousScheduler:
         a.b_seq_snap = a.s_seq_snap = None
         self.controller.note_reject(a.state, a.body, utility)
 
-    def _base_decode_batch(self, fall: List[_Active],
-                           ans: List[_Active]) -> None:
+    def _base_decode_batch(self, fall: List[_Active], ans: List[_Active],
+                           tc: Optional[TickConfig] = None) -> None:
         """The tick's single base-model decode: fallback regenerations
         (stop at step boundaries) and final answers (stop at eos) run as
         one fused multi-sequence call with per-row stop sets/budgets — or,
         in spec mode, through batched token-level speculative decoding
         (hierarchical speculation: the small model drafts gamma tokens
         per row, the base model verifies every row's chunk in one
-        prefill, rejected suffixes roll back by block-table
-        truncation)."""
+        prefill, rejected suffixes roll back by block-table truncation).
+
+        Resilience splits the batch: quarantined rows (retrying after a
+        fault hit) always take the plain path, and the degradation
+        ladder's tick config can shrink gamma or turn the hierarchical
+        path off for everyone — greedy outputs are identical either way
+        (the lossless-speculation property), which is what makes
+        spec-depth the system's safe shedding axis."""
         ctrl, cfg = self.controller, self.controller.cfg
+        tc = tc if tc is not None else self.res.tick_config()
         fall = [a for a in fall if a.alive]
         ans = [a for a in ans if a.alive]
         acts = fall + ans
@@ -972,27 +1372,41 @@ class ContinuousScheduler:
         budgets = [ctrl.max_step_tokens(a.state) for a in fall] \
             + [cfg.answer_max_tokens] * len(ans)
         stops = [ctrl.segmenter.stop_ids] * len(fall) + [[tk.EOS]] * len(ans)
+        outs: List[Optional[List[int]]] = [None] * len(acts)
 
-        if self.spec_be is not None:
+        use_spec = self.spec_be is not None and tc.spec_decode
+        spec_idx = [i for i, a in enumerate(acts)
+                    if use_spec and not a.req.quarantined]
+        spec_set = set(spec_idx)
+
+        if spec_idx:
             # hierarchical path: the spec engine owns both engines' rows
             # for the whole decode (it keeps the small context in sync
             # token for token, like the sequential spec_decode routine)
-            items = [SpecRow(a.base_row, a.small_row, b, st, k)
-                     for a, b, st, k in zip(acts, budgets, stops, keys)]
-            outs, round_stats = self.spec_be.decode_rows(
-                items, cfg.sampling, _SchedulerLedger(self, acts))
-            for a, s in zip(acts, round_stats):
-                if a.alive:
-                    a.state.spec_stats.merge(s)
-        else:
-            rows = [a.base_row for a in acts]
-            outs = self.base_be.generate_rows(rows, budgets, [],
-                                              cfg.sampling, keys,
-                                              stop_ids_rows=stops)
-            for a, ids in zip(acts, outs):
-                self._grow(a, "base", len(ids))
-            sync = [(a, ids) for a, ids in zip(fall, outs[:len(fall)])
-                    if a.alive]
+            sub = [acts[i] for i in spec_idx]
+            items = [SpecRow(acts[i].base_row, acts[i].small_row,
+                             budgets[i], stops[i], keys[i])
+                     for i in spec_idx]
+            s_outs, round_stats = self.spec_be.decode_rows(
+                items, cfg.sampling, _SchedulerLedger(self, sub),
+                gamma=tc.gamma)
+            for i, ids, s in zip(spec_idx, s_outs, round_stats):
+                outs[i] = ids
+                if acts[i].alive:
+                    acts[i].state.spec_stats.merge(s)
+        plain = [i for i in range(len(acts))
+                 if i not in spec_set and acts[i].alive]
+        if plain:
+            p_outs = self.base_be.generate_rows(
+                [acts[i].base_row for i in plain],
+                [budgets[i] for i in plain], [], cfg.sampling,
+                [keys[i] for i in plain],
+                stop_ids_rows=[stops[i] for i in plain])
+            for i, ids in zip(plain, p_outs):
+                outs[i] = ids
+                self._grow(acts[i], "base", len(ids))
+            sync = [(acts[i], outs[i]) for i in plain
+                    if i < len(fall) and acts[i].alive]
             if sync:
                 # keep the small model's context in sync, batched
                 self.small_be.extend_rows([a.small_row for a, _ in sync],
@@ -1000,11 +1414,12 @@ class ContinuousScheduler:
                 for a, ids in sync:
                     self._grow(a, "small", len(ids))
 
-        for a, ids in zip(fall, outs[:len(fall)]):
-            if a.alive:
-                ctrl.note_base_step(a.state, ids)
-        for a, ids in zip(ans, outs[len(fall):]):
-            if a.alive:
+        for i, a in enumerate(fall):
+            if a.alive and outs[i] is not None:
+                ctrl.note_base_step(a.state, outs[i])
+        for i, a in enumerate(ans):
+            ids = outs[len(fall) + i]
+            if a.alive and ids is not None:
                 a.state.answer_ids = ids
                 a.state.phase = "done"
 
@@ -1035,6 +1450,24 @@ class ContinuousScheduler:
             a.pending_base = []
 
     # ------------------------------------------------------------- stats
+    def resilience_stats(self) -> Dict[str, object]:
+        """The run's failure-lifecycle and overload-control counters
+        (the serve CLI's ``[resilience]`` line)."""
+        out: Dict[str, object] = {
+            "timeouts": self.timeouts,
+            "shed": self.shed_requests,
+            "quarantines": self.quarantines,
+            "retries": self.retries,
+            "failed": self.failures,
+            "preemptions": self.preemptions,
+            "stalled_ticks": self.stalled_ticks,
+            "audit_violations": self.audit_violations,
+        }
+        out.update(self.res.as_dict())
+        if self.faults is not None:
+            out["faults"] = self.faults.as_dict()
+        return out
+
     def pool_utilization(self) -> Dict[str, float]:
         """Fraction of each engine's KV block pool currently claimed
         (live sequences + snapshots + cached prefixes)."""

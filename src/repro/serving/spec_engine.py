@@ -120,13 +120,18 @@ class BatchSpecEngine:
         self.gamma = gamma
 
     def decode_rows(self, items: Sequence[SpecRow], params: SamplingParams,
-                    ledger: Optional[SpecLedger] = None
+                    ledger: Optional[SpecLedger] = None,
+                    gamma: Optional[int] = None
                     ) -> Tuple[List[List[int]], List[SpecDecodeStats]]:
         """Run batched speculative decoding until every row hits its stop
         or budget.  Returns (emitted ids per row — bit-identical to the
         sequential ``spec_decode`` with the same key — and per-row
         SpecDecodeStats).  Rows the ledger preempts mid-flight keep their
-        partial output (the caller requeues them anyway)."""
+        partial output (the caller requeues them anyway).  ``gamma``
+        overrides the engine's configured draft length for THIS call —
+        the degradation ladder's shrink-gamma rung (greedy outputs are
+        gamma-invariant; sampled outputs are not bitwise, same as any
+        gamma change)."""
         ledger = ledger or SpecLedger()
         n = len(items)
         assert n <= self.base_be.batch
@@ -144,7 +149,12 @@ class BatchSpecEngine:
             [it.stop_ids for it in items])
         big = self.base_be.batch
         vocab = self.base_be.model.cfg.vocab_size
-        gam = self.gamma
+        gam = self.gamma if gamma is None else gamma
+        if gam < 1:
+            raise ValueError("gamma must be >= 1")
+        if gam > self.gamma:
+            raise ValueError("per-call gamma above the configured gamma "
+                             "would exceed the admission headroom")
 
         while True:
             active = [i for i in range(n)

@@ -38,17 +38,28 @@ def _pump(sched, key: jax.Array) -> bool:
     if isinstance(sched, ContinuousScheduler):
         done_before = len(sched.done)
         sched.tick(key)
-        return bool(sched.active) or len(sched.done) > done_before
+        if sched.active or len(sched.done) > done_before:
+            return True
+        # an injected pool-exhaust hold or stall window blocks admission
+        # only until its expiry tick — keep ticking; that is injected
+        # backpressure, not a genuine scheduler stall
+        faults = getattr(sched, "faults", None)
+        return faults is not None and faults.busy(sched.ticks)
     return sched.step(key) is not None
 
 
 def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
                  arrivals: Sequence[float],
-                 key: Optional[jax.Array] = None) -> List[Request]:
+                 key: Optional[jax.Array] = None,
+                 opts: Optional[Sequence[dict]] = None) -> List[Request]:
     """Submit ``pairs`` at their arrival offsets and drive ``sched`` (either
-    regime) until every request finishes.  Returns the request handles in
-    submission order."""
+    regime) until every request reaches a TERMINAL status (ok, timeout,
+    shed or failed — a cancelled request counts as done; only requests
+    stuck queued/running keep the loop alive).  Returns the request
+    handles in submission order.  ``opts[i]`` are extra per-request
+    submit kwargs (deadline_s / priority / group)."""
     assert len(pairs) == len(arrivals)
+    assert opts is None or len(opts) == len(pairs)
     key = key if key is not None else jax.random.PRNGKey(0)
     t0 = time.perf_counter()
     handles: List[Request] = []
@@ -57,9 +68,10 @@ def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
         now = time.perf_counter() - t0
         while i < len(pairs) and arrivals[i] <= now:
             task, k = pairs[i]
-            handles.append(sched.submit(task, key=k))
+            handles.append(sched.submit(
+                task, key=k, **(opts[i] if opts is not None else {})))
             i += 1
-        done = i >= len(pairs) and all(h.result is not None for h in handles)
+        done = i >= len(pairs) and all(h.terminal for h in handles)
         if done:
             return handles
         key, sub = jax.random.split(key)
@@ -72,7 +84,7 @@ def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
             else:
                 # queue non-empty but admission-blocked: surface why
                 blocked = [h.blocked_reason for h in handles
-                           if h.result is None and h.blocked_reason]
+                           if not h.terminal and h.blocked_reason]
                 raise RuntimeError(
                     f"scheduler stalled: {blocked or 'unknown reason'}")
 
@@ -80,7 +92,8 @@ def run_workload(sched, pairs: Sequence[Tuple[Task, jax.Array]],
 def run_workload_ticks(sched: ContinuousScheduler,
                        pairs: Sequence[Tuple[Task, jax.Array]],
                        arrival_ticks: Sequence[int],
-                       key: Optional[jax.Array] = None) -> List[Request]:
+                       key: Optional[jax.Array] = None,
+                       opts: Optional[Sequence[dict]] = None) -> List[Request]:
     """Drive a continuous scheduler with TICK-synchronous arrivals:
     request ``i`` is submitted just before the scheduler's
     ``arrival_ticks[i]``-th tick.  Unlike wall-clock arrivals this makes
@@ -90,13 +103,15 @@ def run_workload_ticks(sched: ContinuousScheduler,
     stable A/B ratios on noisy shared CPUs.  Latency milestones are
     still stamped in wall time."""
     assert len(pairs) == len(arrival_ticks)
+    assert opts is None or len(opts) == len(pairs)
     key = key if key is not None else jax.random.PRNGKey(0)
     handles: List[Request] = []
     i, t = 0, 0
     while i < len(pairs) or sched.active or sched.queue:
         while i < len(pairs) and t >= arrival_ticks[i]:
             task, k = pairs[i]
-            handles.append(sched.submit(task, key=k))
+            handles.append(sched.submit(
+                task, key=k, **(opts[i] if opts is not None else {})))
             i += 1
         done_before = len(sched.done)
         key, sub = jax.random.split(key)
@@ -141,15 +156,25 @@ class VoteResult:
         return len(self.samples)
 
     @property
+    def survivors(self) -> int:
+        """Samples that actually produced an answer (not shed/failed)."""
+        return sum(c for c in self.counts.values())
+
+    @property
     def agreement(self) -> float:
-        """Fraction of samples that voted for the winner."""
-        return self.counts[tuple(self.winner_ids)] / max(self.n, 1)
+        """Fraction of samples that voted for the winner (0.0 when the
+        whole group was shed and nobody voted)."""
+        return self.counts.get(tuple(self.winner_ids), 0) / max(self.n, 1)
 
 
 def majority_vote(handles: Sequence[Request], n: int) -> List[VoteResult]:
     """Group ``expand_best_of_n``-ordered request handles back into their
     tasks and majority-vote each group's answer token sequences (ties
-    break toward the earliest sample — the deterministic rule)."""
+    break toward the earliest sample — the deterministic rule).  Samples
+    that never produced an answer (shed / timed out / failed under
+    overload) simply do not vote: the winner is decided over the
+    survivors, and a group with zero survivors yields an empty winner
+    instead of crashing — the degraded-but-defined best-of-N contract."""
     assert len(handles) % n == 0, (len(handles), n)
     out = []
     for i in range(0, len(handles), n):
@@ -157,7 +182,9 @@ def majority_vote(handles: Sequence[Request], n: int) -> List[VoteResult]:
         answers = [tuple(h.result.answer_ids) for h in group
                    if h.result is not None]
         counts = Counter(answers)
-        winner = max(answers, key=lambda a: (counts[a], -answers.index(a)))
+        winner = max(answers,
+                     key=lambda a: (counts[a], -answers.index(a))) \
+            if answers else ()
         out.append(VoteResult(task=group[0].task, samples=group,
                               winner_ids=list(winner), counts=dict(counts)))
     return out
@@ -186,15 +213,23 @@ def percentile(sorted_vals: List[float], p: float) -> float:
     return sorted_vals[idx]
 
 
-def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
+def summarize(handles: Sequence[Request], wall_s: float,
+              slo_tpot_s: Optional[float] = None) -> Dict[str, float]:
     """Aggregate one workload run: throughput (req/s, tok/s), end-to-end
     latency percentiles, TTFT / per-output-token (TPOT) / prefill-stall
     percentiles (continuous scheduler — the sequential regime does not
     stamp first-token times), plus spec-decode and prefix-cache counters
-    when the run exercised them."""
-    lats = sorted(h.e2e_latency for h in handles if h.e2e_latency is not None)
+    when the run exercised them.  Latency aggregates cover the requests
+    that COMPLETED (status ok); the failure-outcome counters (timeouts /
+    shed / failed / retries) and ``goodput_req_s`` — completed requests
+    that also met their deadline and the optional ``slo_tpot_s`` bound,
+    per second — make the overload benchmarks honest: a run that sheds
+    half its load cannot claim the throughput of the half it kept."""
+    ok = [h for h in handles if h.status == "ok" or
+          (h.result is not None and h.status == "queued")]
+    lats = sorted(h.e2e_latency for h in ok if h.e2e_latency is not None)
     toks = sum(len(h.result.thinking_ids) + len(h.result.answer_ids)
-               for h in handles if h.result is not None)
+               for h in ok if h.result is not None)
     n = len(lats)
     out = {
         "requests": n,
@@ -205,6 +240,29 @@ def summarize(handles: Sequence[Request], wall_s: float) -> Dict[str, float]:
         "p95_latency_s": round(percentile(lats, 0.95), 4),
         "mean_latency_s": round(sum(lats) / n, 4) if n else 0.0,
     }
+    # failure outcomes + goodput (SLO-met completions per second): a
+    # request counts toward goodput iff it completed, beat its own
+    # deadline (when it carried one) and kept TPOT within ``slo_tpot_s``
+    # (when given)
+    statuses = Counter(h.status for h in handles)
+    out["timeouts"] = statuses.get("timeout", 0)
+    out["shed"] = statuses.get("shed", 0)
+    out["failed"] = statuses.get("failed", 0)
+    out["retries"] = sum(h.retries for h in handles)
+    good = 0
+    for h in ok:
+        if h.result is None:
+            continue
+        if h.deadline_s is not None and (
+                h.e2e_latency is None or h.e2e_latency > h.deadline_s):
+            continue
+        if slo_tpot_s is not None:
+            tp = h.tpot(len(h.result.thinking_ids) + len(h.result.answer_ids))
+            if tp is not None and tp > slo_tpot_s:
+                continue
+        good += 1
+    out["slo_met"] = good
+    out["goodput_req_s"] = round(good / wall_s, 3) if wall_s > 0 else 0.0
     # time-to-first-token / per-output-token latency / prefill stall:
     # stamped per request by the continuous scheduler (tick-granular)
     ttfts = sorted(h.ttft for h in handles if h.ttft is not None)

@@ -1,0 +1,467 @@
+"""Overload resilience: request deadlines and mid-flight cancellation,
+SLO-aware shedding, the speculation-degradation ladder, deterministic
+fault injection (quarantine/retry) and the pool/cache invariant audits."""
+
+import random
+import time
+from types import SimpleNamespace
+
+import jax
+import pytest
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.faults import (Fault, FaultInjector, FaultPlan,
+                                  audit_scheduler)
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.resilience import (OverloadController, ResilienceConfig,
+                                      TickConfig)
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.workload import majority_vote
+from repro.tokenizer import toy as tk
+
+BASE_CFG = ModelConfig(name="sb", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=tk.VOCAB_SIZE).validate()
+SMALL_CFG = ModelConfig(name="ss", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    return (Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256),
+            Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256))
+
+
+# ------------------------------------------------------------------ unit
+
+
+def test_resilience_config_validation():
+    with pytest.raises(ValueError, match="shed_policy"):
+        ResilienceConfig(shed_policy="random")
+    with pytest.raises(ValueError, match="low_water"):
+        ResilienceConfig(low_water=0.9, high_water=0.5)
+    with pytest.raises(ValueError, match="patience"):
+        ResilienceConfig(patience=0)
+    # the default construction is inert and valid
+    ResilienceConfig()
+
+
+BASE_TC = TickConfig(gamma=4, spec_decode=True, max_prefill_tokens=64,
+                     cache_insert=True)
+
+
+def test_ladder_steps_down_and_up_with_hysteresis():
+    """patience consecutive hot ticks per downward step, cooldown
+    consecutive cool ticks per upward step, dead band resets both."""
+    res = OverloadController(ResilienceConfig(
+        degrade=True, high_water=0.8, low_water=0.3,
+        patience=2, cooldown=3), BASE_TC)
+    assert res.tick_config() == BASE_TC
+    assert res.observe_tick(1, 0.9, 0.0, 0) == []       # hot x1
+    ev = res.observe_tick(2, 0.9, 0.0, 0)               # hot x2 -> L1
+    assert res.level == 1 and len(ev) == 1 and "L0 -> L1" in ev[0]
+    assert res.tick_config() == TickConfig(2, True, 64, True)
+    res.observe_tick(3, 0.9, 0.0, 0)
+    res.observe_tick(4, 0.9, 0.0, 0)                    # -> L2
+    assert res.level == 2
+    assert res.tick_config() == TickConfig(2, False, 64, True)
+    for t in range(5, 9):
+        res.observe_tick(t, 0.9, 0.0, 0)                # -> L3 -> L4
+    assert res.level == 4
+    assert res.tick_config() == TickConfig(2, False, 16, False)
+    res.observe_tick(9, 0.9, 0.0, 0)
+    res.observe_tick(10, 0.9, 0.0, 0)                   # capped at L4
+    assert res.level == 4
+    # dead band (between the water marks): counters reset, no movement
+    res.observe_tick(11, 0.1, 0.0, 0)
+    res.observe_tick(12, 0.1, 0.0, 0)                   # cool x2
+    res.observe_tick(13, 0.5, 0.0, 0)                   # dead band: reset
+    res.observe_tick(14, 0.1, 0.0, 0)
+    res.observe_tick(15, 0.1, 0.0, 0)
+    assert res.level == 4                               # still (2 < 3)
+    ev = res.observe_tick(16, 0.1, 0.0, 0)              # cool x3 -> L3
+    assert res.level == 3 and "L4 -> L3" in ev[0]
+    assert len(res.transitions) == 5
+
+
+def test_pressure_signals_and_admit_quota():
+    res = OverloadController(ResilienceConfig(slo_tpot_s=0.01), BASE_TC)
+    # busy rows only count as pressure while arrivals wait on them
+    res.observe_tick(1, 0.2, 1.0, 0)
+    assert res.pressure == 0.2
+    res.observe_tick(2, 0.2, 1.0, 3)
+    assert res.pressure == 1.0
+    # admission throttles only when strained AND something is in flight
+    assert res.admit_quota(1) is None                   # no SLO miss yet
+    res.observe_finish(ttft_s=0.1, tpot_s=0.5, service_s=1.0)
+    res.observe_tick(3, 0.9, 1.0, 3)
+    assert res.admit_quota(1) == 0
+    assert res.admit_quota(0) is None                   # never starve idle
+    assert res.as_dict()["ewma_tpot_s"] == 0.5
+
+
+def test_feasibility_prediction():
+    res = OverloadController(ResilienceConfig(feasibility_factor=1.0),
+                             BASE_TC)
+    assert not res.infeasible(0.001)                    # no estimate yet
+    res.observe_finish(None, None, service_s=2.0)
+    assert res.infeasible(1.0)
+    assert not res.infeasible(3.0)
+    off = OverloadController(ResilienceConfig(feasibility_factor=0.0),
+                             BASE_TC)
+    off.observe_finish(None, None, service_s=2.0)
+    assert not off.infeasible(0.001)
+
+
+def test_fault_plan_deterministic_and_validated():
+    a = FaultPlan.random(seed=7, n_faults=6, n_requests=4)
+    b = FaultPlan.random(seed=7, n_faults=6, n_requests=4)
+    assert a.faults == b.faults
+    assert a.faults != FaultPlan.random(seed=8, n_faults=6,
+                                        n_requests=4).faults
+    assert all(x.tick <= y.tick for x, y in zip(a.faults, a.faults[1:]))
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(tick=1, kind="gamma_ray")
+    with pytest.raises(ValueError, match="needs a target"):
+        Fault(tick=1, kind="nan_logits")
+
+
+def test_vote_over_survivors_and_empty_group():
+    def h(answer):
+        return SimpleNamespace(task=None, result=None if answer is None
+                               else SimpleNamespace(answer_ids=answer))
+    # group 1: one sample shed -> vote over the 2 survivors; group 2:
+    # everything shed -> empty winner, zero agreement, no crash
+    votes = majority_vote([h([1, 2]), h([1, 2]), h(None),
+                           h(None), h(None), h(None)], n=3)
+    assert votes[0].winner_ids == [1, 2]
+    assert votes[0].survivors == 2
+    assert votes[0].agreement == pytest.approx(2 / 3)
+    assert votes[1].winner_ids == [] and votes[1].survivors == 0
+    assert votes[1].agreement == 0.0
+
+
+# ------------------------------------------------------------- engines
+
+
+def _make_sched(engine_pair, spec=False, gamma=3, threshold=5.0,
+                temperature=0.0, kv_bytes=1 << 26, kv_fraction=0.8,
+                max_batch=4, context_capacity=128, prefix_cache=True,
+                max_prefill_tokens=64, resilience=None, faults=None,
+                audit=True):
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
+                           token_budget=48, max_steps=6,
+                           use_spec_decode=spec, spec_gamma=gamma,
+                           sampling=SamplingParams(temperature=temperature))
+    ctrl = SpecReason(base, small, cfg)
+    kv = KVManager(BASE_CFG, SMALL_CFG,
+                   KVBudget(total_bytes=kv_bytes, base_fraction=kv_fraction))
+    return ctrl, ContinuousScheduler(
+        ctrl, kv, max_batch=max_batch, context_capacity=context_capacity,
+        prefix_cache=prefix_cache, max_prefill_tokens=max_prefill_tokens,
+        resilience=resilience, faults=faults, audit=audit)
+
+
+def _workload(n, seed=0):
+    rng = random.Random(seed)
+    reqs = [tasks.sample_task(rng) for _ in range(n)]
+    keys = [jax.random.PRNGKey(100 * seed + i) for i in range(n)]
+    return reqs, keys
+
+
+_BASELINES = {}
+
+
+def _baseline(engine_pair, n, seed=0, spec=False, gamma=3):
+    """Fault-free sequential outputs for the standard workload (cached:
+    the controller is deterministic given the pinned keys)."""
+    k = (n, seed, spec, gamma)
+    if k not in _BASELINES:
+        ctrl, _ = _make_sched(engine_pair, spec=spec, gamma=gamma)
+        reqs, keys = _workload(n, seed)
+        _BASELINES[k] = [ctrl.run(tasks.question_tokens(t), key)
+                         for t, key in zip(reqs, keys)]
+    return _BASELINES[k]
+
+
+def _drive(cs, max_ticks=400):
+    """Drive ticks directly with a hard bound (the chaos contract: a
+    faulted scheduler must DRAIN, never hang)."""
+    key = jax.random.PRNGKey(9)
+    for _ in range(max_ticks):
+        key, sub = jax.random.split(key)
+        if not cs.tick(sub):
+            return
+    raise AssertionError(f"scheduler failed to drain in {max_ticks} ticks")
+
+
+def _assert_drained_clean(cs):
+    assert not cs.active and not cs.queue
+    assert audit_scheduler(cs) == []
+    cs.clear_prefix_cache()
+    assert cs.pool_utilization() == {"base": 0.0, "small": 0.0}
+    assert cs.base_be.free_rows == cs.base_be.batch
+    assert cs.small_be.free_rows == cs.small_be.batch
+
+
+def test_deadline_timeout_midflight_and_queued(engine_pair):
+    """A deadline expiring mid-flight cancels the row (status timeout,
+    blocks reclaimed); one expiring in the queue never admits; the
+    unaffected request's outputs are bit-identical to the fault-free
+    run."""
+    seq = _baseline(engine_pair, 2)
+    reqs, keys = _workload(2)
+    _, cs = _make_sched(engine_pair, max_batch=2)
+    h0 = cs.submit(reqs[0], key=keys[0])
+    h1 = cs.submit(reqs[1], key=keys[1])
+    # queued expiry: a third request whose deadline is already gone
+    h2 = cs.submit(reqs[0], key=keys[0], deadline_s=1e-9)
+    time.sleep(0.001)
+    cs.tick(jax.random.PRNGKey(9))          # admits h0/h1, times out h2
+    assert h2.status == "timeout" and h2.error.code == "deadline"
+    assert "queued" in h2.error.message and h2.result is None
+    assert h1.status == "running"
+    # mid-flight expiry: arm h1's deadline now that it holds rows/blocks
+    h1.deadline_s = 1e-9
+    _drive(cs)
+    assert h1.status == "timeout" and h1.error.code == "deadline"
+    assert h1.result is None and h1.terminal
+    assert h0.status == "ok"
+    assert h0.result.thinking_ids == seq[0].thinking_ids
+    assert h0.result.answer_ids == seq[0].answer_ids
+    assert cs.timeouts == 2 and cs.base_be.meter.req_timeouts == 2
+    _assert_drained_clean(cs)
+
+
+def test_cancel_during_chunked_prefill(engine_pair):
+    """Cancellation landing in the middle of a chunked prefill releases
+    the partially-built block table and the row without corrupting the
+    pool ledger (the audit runs every tick)."""
+    seq = _baseline(engine_pair, 2)
+    reqs, keys = _workload(2)
+    _, cs = _make_sched(engine_pair, max_batch=2, max_prefill_tokens=4)
+    h0 = cs.submit(reqs[0], key=keys[0])
+    h1 = cs.submit(reqs[1], key=keys[1])
+    cs.tick(jax.random.PRNGKey(9))
+    # the shared per-tick budget goes to the queue head first: h0 is
+    # mid-prefill (partial block table), h1 admitted but not started
+    a0 = next(a for a in cs.active if a.req is h0)
+    assert a0.state.phase == "prefill" and 0 < a0.cursor < len(a0.prompt)
+    h0.deadline_s = 1e-9                     # expire mid-prefill
+    _drive(cs)
+    assert h0.status == "timeout" and h0.result is None
+    assert h1.status == "ok"
+    assert h1.result.thinking_ids == seq[1].thinking_ids
+    assert h1.result.answer_ids == seq[1].answer_ids
+    _assert_drained_clean(cs)
+
+
+def test_cancel_is_idempotent(engine_pair):
+    """A deadline sweep, a quarantine and a preemption can all target one
+    row in one tick — the release latch must fire exactly once (a double
+    release would corrupt the refcount ledger, which the audit checks)."""
+    reqs, keys = _workload(1)
+    _, cs = _make_sched(engine_pair, max_batch=2)
+    h = cs.submit(reqs[0], key=keys[0])
+    cs.tick(jax.random.PRNGKey(9))
+    a = next(x for x in cs.active if x.req is h)
+    cs._cancel(a, "timeout", "deadline", "test cancel")
+    cs._cancel(a, "failed", "engine_error", "second cancel is a no-op")
+    cs._release(a)
+    assert h.status == "timeout" and cs.timeouts == 1 and cs.failures == 0
+    assert len(cs.done) == 1
+    _assert_drained_clean(cs)
+
+
+def test_shed_priority_order_and_sibling_preference(engine_pair):
+    """Over max_queue, shedding drops the lowest-priority victim; within
+    a class it prefers a best-of-N sibling whose group keeps survivors
+    (drop a ballot, not a whole request), youngest first."""
+    seq = _baseline(engine_pair, 2)
+    reqs, keys = _workload(2)
+    res = ResilienceConfig(shed_policy="priority", max_queue=3)
+    _, cs = _make_sched(engine_pair, max_batch=1, resilience=res)
+    ha = cs.submit(reqs[0], key=keys[0], priority=1)
+    hb = cs.submit(reqs[1], key=keys[1])                        # singleton
+    hc = cs.submit(reqs[0], key=keys[0], group="g")
+    hd = cs.submit(reqs[0], key=keys[0], group="g")
+    _drive(cs)
+    # the shed sweep sees the full 4-deep queue (1 over max_queue): ha is
+    # protected by priority, hb is an uncovered singleton, hc/hd cover
+    # each other -> the younger sibling hd sheds; everyone else completes
+    assert hd.status == "shed" and hd.error.code == "shed_overload"
+    assert hd.result is None
+    assert [ha.status, hb.status, hc.status] == ["ok"] * 3
+    assert cs.shed_requests == 1 and cs.base_be.meter.req_shed == 1
+    assert ha.result.answer_ids == seq[0].answer_ids
+    assert hb.result.answer_ids == seq[1].answer_ids
+    # the group vote still has hc's ballot
+    votes = majority_vote([hc, hd], n=2)
+    assert votes[0].winner_ids == hc.result.answer_ids
+    _assert_drained_clean(cs)
+
+
+def test_degradation_ladder_preserves_greedy_outputs(engine_pair):
+    """Force the ladder to max degradation from the first tick: greedy
+    outputs must stay bit-identical to the fault-free full-config run —
+    every rung (smaller gamma, spec off, smaller prefill chunks, no cache
+    insertion) trades latency headroom, not answers."""
+    seq = _baseline(engine_pair, 3, spec=True)
+    reqs, keys = _workload(3)
+    res = ResilienceConfig(degrade=True, high_water=0.0, low_water=0.0,
+                           patience=1)
+    _, cs = _make_sched(engine_pair, spec=True, resilience=res)
+    hs = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    _drive(cs)
+    # one step down per tick; short runs may finish before hitting L4,
+    # but the spec-off rung (L2) must have been reached and applied
+    assert cs.res.level >= 2
+    assert len(cs.res.transitions) == cs.res.level
+    for r_seq, h in zip(seq, hs):
+        assert h.status == "ok"
+        assert h.result.thinking_ids == r_seq.thinking_ids
+        assert h.result.answer_ids == r_seq.answer_ids
+    _assert_drained_clean(cs)
+
+
+def test_nan_fault_quarantines_then_retry_is_identical(engine_pair):
+    """An injected NaN row is quarantined by the health scan before
+    anything samples from it, retried once with speculation disabled, and
+    the retry's greedy outputs are bit-identical to the fault-free run."""
+    seq = _baseline(engine_pair, 3, spec=True)
+    reqs, keys = _workload(3)
+    inj = FaultInjector(FaultPlan(
+        [Fault(tick=2, kind="nan_logits", target=0, which="base")]))
+    _, cs = _make_sched(engine_pair, spec=True, faults=inj)
+    hs = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    _drive(cs)
+    assert inj.injected["nan_logits"] == 1
+    assert cs.quarantines == 1 and cs.retries == 1
+    assert hs[0].retries == 1 and hs[0].quarantined
+    for r_seq, h in zip(seq, hs):
+        assert h.status == "ok"
+        assert h.result.thinking_ids == r_seq.thinking_ids
+        assert h.result.answer_ids == r_seq.answer_ids
+    _assert_drained_clean(cs)
+
+
+def test_fault_past_retry_budget_fails_structurally(engine_pair):
+    """A row faulted again after its retry terminates with status
+    ``failed`` and a structured error — never a hang or a crash — and
+    the other requests are untouched."""
+    seq = _baseline(engine_pair, 3, spec=True)
+    reqs, keys = _workload(3)
+    inj = FaultInjector(FaultPlan(
+        [Fault(tick=t, kind="nan_logits", target=0, which="base")
+         for t in range(2, 7)]))
+    _, cs = _make_sched(engine_pair, spec=True, faults=inj)
+    hs = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    _drive(cs)
+    assert hs[0].status == "failed" and hs[0].result is None
+    assert hs[0].error.code == "nan_logits" and hs[0].error.tick > 0
+    assert "retries exhausted" in hs[0].error.message
+    assert cs.failures == 1 and cs.base_be.meter.req_failed == 1
+    for r_seq, h in zip(seq[1:], hs[1:]):
+        assert h.status == "ok"
+        assert h.result.answer_ids == r_seq.answer_ids
+    _assert_drained_clean(cs)
+
+
+def test_mixed_fault_plan_recovers(engine_pair):
+    """Raise + pool-exhaustion + stall in one plan: the raise fires
+    BEFORE the engine call (quarantine + clean retry), the transient
+    exhaustion preempts/requeues instead of crashing, the stall freezes
+    phases without freezing the failure lifecycle — and every request
+    still finishes with fault-free outputs."""
+    seq = _baseline(engine_pair, 3, spec=True)
+    reqs, keys = _workload(3)
+    inj = FaultInjector(FaultPlan([
+        Fault(tick=2, kind="raise", target=1),
+        Fault(tick=3, kind="pool_exhaust", which="base", duration=2),
+        Fault(tick=6, kind="stall", duration=2),
+    ]))
+    _, cs = _make_sched(engine_pair, spec=True, faults=inj)
+    hs = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    _drive(cs)
+    assert inj.injected["raise"] == 1
+    assert inj.injected["pool_exhaust"] == 1
+    assert cs.stalled_ticks == 2
+    assert cs.quarantines >= 1
+    for r_seq, h in zip(seq, hs):
+        assert h.status == "ok"
+        assert h.result.thinking_ids == r_seq.thinking_ids
+        assert h.result.answer_ids == r_seq.answer_ids
+    _assert_drained_clean(cs)
+
+
+def test_audit_catches_deliberate_leak(engine_pair):
+    """Negative control: the audit must actually see a leaked block (a
+    ref the scheduler cannot account for), not just pass vacuously."""
+    reqs, keys = _workload(1)
+    _, cs = _make_sched(engine_pair, audit=False)
+    cs.submit(reqs[0], key=keys[0])
+    _drive(cs)
+    assert audit_scheduler(cs) == []
+    leaked = cs.pools["base"].alloc()
+    viols = audit_scheduler(cs)
+    assert viols and any(f"block {leaked}" in v for v in viols)
+    cs.pools["base"].release(leaked)
+    assert audit_scheduler(cs) == []
+
+
+def _chaos_check(engine_pair, seed):
+    """The chaos acceptance bar for one seeded fault plan: the scheduler
+    always drains within a tick bound, audits stay clean every tick,
+    pools reconcile to zero, requests that finished ok are bit-identical
+    to the fault-free run, and every non-ok request carries a structured
+    error."""
+    seq = _baseline(engine_pair, 3, spec=True)
+    reqs, keys = _workload(3)
+    inj = FaultInjector(FaultPlan.random(
+        seed=seed, n_faults=4, n_requests=3, max_tick=10))
+    _, cs = _make_sched(engine_pair, spec=True, faults=inj,
+                        kv_bytes=1 << 20, kv_fraction=0.6)
+    hs = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    _drive(cs, max_ticks=200)               # audit=True: raises on any
+    #                                       # ledger divergence mid-run
+    assert cs.audit_violations == 0
+    for r_seq, h in zip(seq, hs):
+        assert h.terminal
+        if h.status == "ok":
+            assert h.result.thinking_ids == r_seq.thinking_ids
+            assert h.result.answer_ids == r_seq.answer_ids
+        else:
+            assert h.result is None
+            assert h.error is not None and h.error.code
+    _assert_drained_clean(cs)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 13, 42])
+def test_chaos_fixed_seeds_drain_clean(engine_pair, seed):
+    """Deterministic slice of the chaos bar (runs everywhere, including
+    images without hypothesis — the CI chaos job's gate)."""
+    _chaos_check(engine_pair, seed)
+
+
+def test_chaos_property_random_plans_always_drain_clean(engine_pair):
+    """Property form: RANDOM seeded fault plans, same invariants."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 2 ** 16))
+    def check(seed):
+        _chaos_check(engine_pair, seed)
+
+    check()
