@@ -87,6 +87,14 @@ def build_table() -> str:
             f"ladder vs serve-all | **{d['goodput_ratio']:.2f}x** goodput "
             f"(SLO-met req/s), {d['p95_tpot_ratio']:.2f}x p95 TPOT | "
             f"`BENCH_overload.json` |")
+    d = _load("BENCH_telemetry.json")
+    if d:
+        rows.append(
+            f"| Telemetry overhead | {d['num_requests']} spec-decode "
+            f"requests, tracing off vs on vs on+metrics | "
+            f"**{d['req_s_ratio_trace']:.2f}x** req/s traced "
+            f"({d['req_s_ratio_trace_metrics']:.2f}x with metrics; "
+            f"1.0 = free) | `BENCH_telemetry.json` |")
     return "\n".join(rows)
 
 

@@ -62,6 +62,17 @@ verifies the pool-refcount / block-table / radix-cache invariants every
 tick.  The ``[resilience]`` line and per-request ``status=`` report the
 outcome mix.
 
+**Observability** (continuous scheduler): ``--trace out.json`` records a
+per-request / per-tick span timeline into a bounded ring buffer
+(``--trace-buffer N`` events) and exports it as Chrome trace-event JSON
+— open it in Perfetto / chrome://tracing, or run
+``tools/trace_report.py out.json`` for a per-request waterfall, a
+phase-attribution table and the speculation funnel.  ``--metrics-out
+metrics.prom`` writes a Prometheus-style text exposition of the serving
+metrics (TTFT/TPOT/chunk-latency/accepted-length histograms, request
+and token counters, pressure/occupancy gauges) after the run.  Tracing
+never alters outputs: traced runs are token-identical to untraced ones.
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
@@ -92,6 +103,7 @@ from ..serving.kv_manager import KVBudget, KVManager
 from ..serving.loader import load_testbed_engines
 from ..serving.resilience import ResilienceConfig
 from ..serving.scheduler import ContinuousScheduler
+from ..serving.telemetry import ServingMetrics, Tracer
 from ..serving.workload import (expand_best_of_n, majority_vote,
                                 poisson_arrivals, run_workload, summarize)
 from ..tokenizer import toy as tk
@@ -172,6 +184,8 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
         injector = FaultInjector(FaultPlan.random(
             seed=int(seed), n_faults=int(nf) if nf else 4,
             n_requests=len(reqs) * args.num_samples, max_tick=8))
+    tracer = Tracer(buffer=args.trace_buffer) if args.trace else None
+    metrics = ServingMetrics() if args.metrics_out else None
     sched = ContinuousScheduler(ctrl, kv, max_batch=args.batch,
                                 context_capacity=min(base.max_len,
                                                      args.budget + 64),
@@ -181,7 +195,8 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                                 resilience=res_cfg, faults=injector,
                                 audit=args.audit,
                                 on_event=(lambda s: print(f"[sched] {s}"))
-                                if args.verbose else None)
+                                if args.verbose else None,
+                                tracer=tracer, metrics=metrics)
     rng = random.Random(args.seed)
     pairs = [(t, jax.random.PRNGKey(1000 * args.seed + i))
              for i, t in enumerate(reqs)]
@@ -270,6 +285,14 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                   for w, s in sched.cache_stats().items()
                   for k, v in s.items() if k in ("hit_rate",
                                                  "evicted_blocks")})
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"[trace] {args.trace}: {len(tracer.entries())} events "
+              f"({tracer.dropped} dropped)")
+    if metrics is not None:
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.render())
+        print(f"[metrics] {args.metrics_out}")
     print(json.dumps(stats))
 
 
@@ -375,6 +398,22 @@ def main(argv=None):
                     help="run the per-tick invariant audits (pool "
                          "refcount ledger, block-table consistency, "
                          "radix-cache agreement); any violation raises")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="continuous scheduler: record a per-request / "
+                         "per-tick span timeline and export it as Chrome "
+                         "trace-event JSON (open in Perfetto or "
+                         "chrome://tracing; analyze with "
+                         "tools/trace_report.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.prom",
+                    help="continuous scheduler: write a Prometheus-style "
+                         "text exposition of the serving metrics "
+                         "(TTFT/TPOT/chunk-latency/acceptance "
+                         "histograms, request/token counters, "
+                         "pressure/occupancy gauges) after the run")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="tracer ring-buffer capacity in events; the "
+                         "oldest events are dropped beyond this "
+                         "(default 65536)")
     args = ap.parse_args(argv)
     if args.max_prefill_tokens < 1:
         ap.error("--max-prefill-tokens must be >= 1")
@@ -388,6 +427,11 @@ def main(argv=None):
             or args.inject_faults or args.audit):
         ap.error("--deadline/--slo-tpot/--shed-policy/--degrade/"
                  "--inject-faults/--audit ride on the continuous "
+                 "scheduler; add --scheduler continuous")
+    if args.trace_buffer < 1:
+        ap.error("--trace-buffer must be >= 1")
+    if args.scheduler != "continuous" and (args.trace or args.metrics_out):
+        ap.error("--trace/--metrics-out ride on the continuous "
                  "scheduler; add --scheduler continuous")
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "

@@ -45,6 +45,7 @@ import numpy as np
 from ..models.model import Model
 from ..sampling.sample import SamplingParams, probs_from_logits, sample
 from .engine import DEFAULT_BUCKETS, Meter, _STOP_SLOTS
+from .telemetry import Tracer, engine_track
 
 
 @dataclasses.dataclass
@@ -72,7 +73,7 @@ class BatchEngine:
     def __init__(self, model: Model, params, batch: int,
                  capacity: int = 1024,
                  buckets: Sequence[int] = DEFAULT_BUCKETS, name: str = "",
-                 pad_id: int = 0):
+                 pad_id: int = 0, tracer: Optional[Tracer] = None):
         if model.cfg.has_ssm:
             raise ValueError(
                 "BatchEngine is attention-only: ragged batched rows rely on "
@@ -87,6 +88,13 @@ class BatchEngine:
         self.name = name or f"batch-{model.cfg.name}"
         self.pad_id = pad_id
         self.meter = Meter()
+        # optional telemetry: engine-call bracket spans on the tracer's
+        # ``engine:<name>`` track; with ``tracer.annotate`` each jitted
+        # dispatch is additionally wrapped in jax.profiler.TraceAnnotation
+        # so device profiles line up with the serving-phase spans.  Every
+        # recording site is guarded on ``tracer is not None`` (the
+        # zero-cost-when-off contract — see serving/telemetry.py).
+        self.tracer = tracer
         state = model.init_state(batch, capacity)
         self.state = dataclasses.replace(
             state, pos=jnp.zeros((batch,), jnp.int32))
@@ -174,6 +182,16 @@ class BatchEngine:
         self.state = dataclasses.replace(
             self.state, pos=jnp.asarray(self.pos, jnp.int32))
 
+    def _dispatch(self, op: str, fn: Callable, *args):
+        """Run one jitted engine call, wrapped in a
+        ``jax.profiler.TraceAnnotation`` named ``<engine>.<op>`` when the
+        attached tracer asks for device-profile alignment."""
+        tr = self.tracer
+        if tr is not None and tr.annotate:
+            with jax.profiler.TraceAnnotation(f"{self.name}.{op}"):
+                return fn(*args)
+        return fn(*args)
+
     def _prefill_fn(self, cap_eff: int) -> Callable:
         """Batched prefill on a ``cap_eff``-slot cache slice (merged back
         afterwards) — same occupied-prefix discipline as the decode loop."""
@@ -208,12 +226,14 @@ class BatchEngine:
     # ------------------------------------------------------------ extend
     def extend_rows(self, rows: Sequence[int],
                     token_lists: Sequence[Sequence[int]],
-                    want_logits: bool = False
+                    want_logits: bool = False, op: str = "extend"
                     ) -> Optional[List[np.ndarray]]:
         """Length-bucketed batched prefill: append ``token_lists[i]`` to
         row ``rows[i]``; all involved rows advance in ONE jitted call.
         With ``want_logits``, returns each involved row's (n_i, V) logits
-        (the spec-decode/verifier scoring path)."""
+        (the spec-decode/verifier scoring path).  ``op`` labels the
+        call's tracer bracket (``prefill_rows`` relabels its delegated
+        extends)."""
         assert len(rows) == len(token_lists)
         lens = [len(t) for t in token_lists]
         if not rows or max(lens, default=0) == 0:
@@ -237,11 +257,17 @@ class BatchEngine:
         fn = self._prefill_fn(self._cap_bucket(need))
         self._sync_pos()
         t0 = time.perf_counter()
-        logits, new_state = fn(self.params, jnp.asarray(toks), self.state)
+        logits, new_state = self._dispatch(op, fn, self.params,
+                                           jnp.asarray(toks), self.state)
         logits = jax.block_until_ready(logits)     # the ONE host sync
-        self.meter.prefill_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.meter.prefill_time += t1 - t0
         self.meter.prefill_tokens += bucket * len(rows)
         self.meter.prefill_calls += 1
+        if self.tracer is not None:
+            self.tracer.span(engine_track(self.name), op, t0, t1,
+                             {"rows": len(rows), "tokens": sum(lens),
+                              "bucket": bucket})
         # per-row position advance: involved rows by their REAL length,
         # uninvolved rows not at all (their pad chunk wrote past pos only)
         for r, n in zip(rows, lens):
@@ -281,7 +307,7 @@ class BatchEngine:
             assert self.pos[r] == s, \
                 f"row {r}: chunk declared at offset {s} but the row " \
                 f"sits at {self.pos[r]} — prefill cursor out of sync"
-        return self.extend_rows(rows, chunks, want_logits)
+        return self.extend_rows(rows, chunks, want_logits, op="prefill")
 
     # ---------------------------------------------------------- generate
     def _decode_buf(self, max_tokens: int) -> int:
@@ -461,15 +487,20 @@ class BatchEngine:
 
         self._sync_pos()
         t0 = time.perf_counter()
-        toks, n, logits, new_state, probs = fn(
+        toks, n, logits, new_state, probs = self._dispatch(
+            "decode", fn,
             self.params, self.state, jnp.asarray(self.last_logits),
             jnp.asarray(key_mat), stop_arr, jnp.asarray(stop_mask),
             jnp.asarray(n_max), jnp.asarray(greedy))
         toks = np.asarray(jax.block_until_ready(toks))  # the ONE host sync
         n = np.asarray(n)
-        self.meter.decode_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.meter.decode_time += t1 - t0
         self.meter.decode_tokens += int(n.sum())
         self.meter.decode_calls += 1
+        if self.tracer is not None:
+            self.tracer.span(engine_track(self.name), "decode", t0, t1,
+                             {"rows": len(rows), "tokens": int(n.sum())})
 
         lg = np.asarray(logits, np.float32)
         out: List[List[int]] = []
@@ -592,12 +623,22 @@ class BatchEngine:
             assert 0 < len(slots) * bs <= self.capacity
             slot_mat[i, :len(slots)] = list(slots)
         fn = self._import_fn((len(rows), max_nb))
-        k, v = fn(self.state.k, self.state.v, k_pages, v_pages,
-                  jnp.asarray(slot_mat),
-                  jnp.asarray(list(rows), jnp.int32))
+        t0 = time.perf_counter()
+        k, v = self._dispatch("cache_seed", fn,
+                              self.state.k, self.state.v, k_pages, v_pages,
+                              jnp.asarray(slot_mat),
+                              jnp.asarray(list(rows), jnp.int32))
         self.state = dataclasses.replace(self.state, k=k, v=v)
         for row, slots in zip(rows, slot_lists):
             self.pos[row] = len(slots) * bs
+        if self.tracer is not None:
+            # dispatch-side bracket only: the seed is deliberately not
+            # host-synced (it overlaps the admission tick's later work)
+            self.tracer.span(engine_track(self.name), "cache_seed", t0,
+                             time.perf_counter(),
+                             {"rows": len(rows),
+                              "tokens": sum(len(s) * bs
+                                            for s in slot_lists)})
 
     # -------------------------------------------------------------- feed
     def _feed_fn(self, cap_eff: int) -> Callable:
@@ -659,12 +700,18 @@ class BatchEngine:
         fn = self._feed_fn(self._cap_bucket(need))
         self._sync_pos()
         t0 = time.perf_counter()
-        logits, new_state = fn(self.params, self.state, jnp.asarray(toks),
-                               jnp.asarray(active))
+        logits, new_state = self._dispatch("feed", fn,
+                                           self.params, self.state,
+                                           jnp.asarray(toks),
+                                           jnp.asarray(active))
         logits = jax.block_until_ready(logits)     # the ONE host sync
-        self.meter.decode_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.meter.decode_time += t1 - t0
         self.meter.decode_tokens += len(rows)
         self.meter.decode_calls += 1
+        if self.tracer is not None:
+            self.tracer.span(engine_track(self.name), "feed", t0, t1,
+                             {"rows": len(rows)})
         lg = np.asarray(logits, np.float32)
         for r in rows:
             self.pos[r] += 1

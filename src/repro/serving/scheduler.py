@@ -114,6 +114,8 @@ from .resilience import (STATUS_FAILED, STATUS_OK, STATUS_SHED,
                          OverloadController, RequestError, ResilienceConfig,
                          TickConfig)
 from .spec_engine import BatchSpecEngine, SpecLedger, SpecRow
+from .telemetry import (TRACK_SCHED, SchedEvent, ServingMetrics, Tracer,
+                        request_track)
 
 
 @dataclasses.dataclass
@@ -407,8 +409,24 @@ class ContinuousScheduler:
 
     ``chunked_prefill=False`` restores monolithic admission prefill (the
     whole cache-miss suffix in the admission tick); ``on_event`` receives
-    human-readable admission / chunk-progress / preemption lines (the
-    serve CLI's ``--verbose``)."""
+    admission / chunk-progress / preemption events as
+    :class:`telemetry.SchedEvent` — a ``str`` subclass rendering the
+    same human-readable lines as always (the serve CLI's ``--verbose``),
+    with ``.kind``/``.fields`` for structured consumers.
+
+    **Observability** (serving/telemetry.py, DESIGN.md §Observability):
+    an attached ``tracer`` records per-request span timelines (queued ->
+    prefill chunks -> speculate/verify/close/fallback/answer ->
+    spec-decode rounds with accepted lengths, plus preemption /
+    degradation / cancellation instants) and per-tick scheduler spans
+    (batch composition, pool occupancy, pressure, prefill budget spent)
+    into a bounded ring buffer, exportable as Chrome trace-event JSON;
+    an attached ``metrics`` bundle feeds a Prometheus-style registry
+    (TTFT/TPOT/chunk-latency/accepted-length histograms and the serving
+    counters/gauges).  Both are ``None`` by default and every recording
+    site is guarded on that — tracing off costs nothing, tracing on
+    performs no device dispatches, host syncs or PRNG use, so outputs
+    stay token-identical (tested in tests/test_telemetry.py)."""
 
     def __init__(self, controller: SpecReason, kv: KVManager,
                  max_batch: int = 8, context_capacity: int = 256,
@@ -422,7 +440,9 @@ class ContinuousScheduler:
                  on_event: Optional[Callable[[str], None]] = None,
                  resilience: Optional[ResilienceConfig] = None,
                  faults: Optional[FaultInjector] = None,
-                 audit: bool = False):
+                 audit: bool = False,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[ServingMetrics] = None):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -444,14 +464,18 @@ class ContinuousScheduler:
         if context_capacity > engine_capacity:
             raise ValueError("context_capacity exceeds engine capacity")
         self.context_capacity = context_capacity
+        self.tracer = tracer
+        self.metrics = metrics
         self.base_be = BatchEngine(controller.base.model,
                                    controller.base.params, max_batch,
                                    engine_capacity,
-                                   name=f"cb-{controller.base.name}")
+                                   name=f"cb-{controller.base.name}",
+                                   tracer=tracer)
         self.small_be = BatchEngine(controller.small.model,
                                     controller.small.params, max_batch,
                                     engine_capacity,
-                                    name=f"cb-{controller.small.name}")
+                                    name=f"cb-{controller.small.name}",
+                                    tracer=tracer)
         self.spec_be = BatchSpecEngine(self.base_be, self.small_be,
                                        self.gamma) if self.spec else None
         self.pools = {
@@ -573,9 +597,20 @@ class ContinuousScheduler:
             nb -= 1
         return max(nb, 0) * self.kv.block_size
 
-    def _log(self, msg: str) -> None:
+    def _emit(self, kind: str, msg: str, **fields) -> None:
+        """Emit one structured scheduler event: ``on_event`` receives a
+        :class:`SchedEvent` (a ``str`` subclass rendering exactly the
+        legacy line, with ``.kind``/``.fields`` for structured
+        consumers); an attached tracer records it as an instant on the
+        owning track (the request's when ``fields`` name one).  With
+        neither attached this is a no-op."""
+        if self.on_event is None and self.tracer is None:
+            return
+        ev = SchedEvent(kind, msg, fields)
         if self.on_event is not None:
-            self.on_event(msg)
+            self.on_event(ev)
+        if self.tracer is not None:
+            self.tracer.event(ev)
 
     def _admit(self, key: jax.Array, tc: TickConfig,
                quota: Optional[int] = None) -> None:
@@ -640,9 +675,12 @@ class ContinuousScheduler:
                     # admit it as a deeper hit next tick
                     req.blocked_reason = ("deferred: waiting for shared "
                                           "prefix insert")
-                    self._log(f"defer {req.request_id}: waiting for "
-                              f"shared prefix insert (hit {cached}"
-                              f"/{cacheable} cacheable tokens)")
+                    self._emit("defer",
+                               f"defer {req.request_id}: waiting for "
+                               f"shared prefix insert (hit {cached}"
+                               f"/{cacheable} cacheable tokens)",
+                               request=req.request_id, hit=cached,
+                               cacheable=cacheable)
                     continue
             # chunked prefill reserves blocks INCREMENTALLY: admission
             # claims only the first chunk's blocks (+ headroom); each
@@ -741,13 +779,20 @@ class ContinuousScheduler:
             if self.caches is not None and cached < cacheable:
                 fresh_prompts.append(prompt)
             admitted.append(a)
-            self._log(f"admit {req.request_id}: prompt={len(prompt)} "
-                      f"cached={cached} first_chunk={first}"
-                      + ("" if first >= len(prompt) - cached else
-                         f" (chunked, {len(prompt) - cached} suffix "
-                         f"tokens over >= "
-                         f"{-(-(len(prompt) - cached) // max(first, 1))} "
-                         f"ticks)"))
+            if self.tracer is not None:
+                # the request's wait-for-admission window, on its track
+                self.tracer.span(request_track(req.request_id), "queued",
+                                 req.submitted_at, req.admitted_at)
+            self._emit("admit",
+                       f"admit {req.request_id}: prompt={len(prompt)} "
+                       f"cached={cached} first_chunk={first}"
+                       + ("" if first >= len(prompt) - cached else
+                          f" (chunked, {len(prompt) - cached} suffix "
+                          f"tokens over >= "
+                          f"{-(-(len(prompt) - cached) // max(first, 1))} "
+                          f"ticks)"),
+                       request=req.request_id, prompt=len(prompt),
+                       cached=cached, first_chunk=first)
         if admitted:
             for which, be in (("base", self.base_be),
                               ("small", self.small_be)):
@@ -765,7 +810,7 @@ class ContinuousScheduler:
                 self.active.append(a)
 
     # ----------------------------------------------------------- prefill
-    def _prefill_tick(self, tc: TickConfig) -> None:
+    def _prefill_tick(self, tc: TickConfig) -> int:
         """The tick's bounded chunked-prefill batch: advance every
         mid-prefill row by its next chunk, FIFO over admission order,
         spending at most ``max_prefill_tokens`` prompt tokens per tick
@@ -777,12 +822,14 @@ class ContinuousScheduler:
         prefix cache (so preempted mid-prefill requests restore finished
         chunks on readmission and wait-for-prefix siblings admit as hits
         as soon as the cold prefill lands).  A request whose cursor
-        reaches its prompt end enters the controller's think phase."""
+        reaches its prompt end enters the controller's think phase.
+        Returns the prompt tokens spent (the tick span's budget-spent
+        field)."""
         acts = self._guard("prefill",
                            [a for a in self.active
                             if a.state.phase == "prefill"])
         if not acts:
-            return
+            return 0
         budget = tc.max_prefill_tokens if self.chunked else None
         # FCFS budget packing (vLLM/Sarathi-style): the oldest mid-prefill
         # row takes as much of the tick's budget as it needs, younger rows
@@ -813,7 +860,10 @@ class ContinuousScheduler:
         # a later row's grow may have preempted an earlier chunked row
         chunks = [(a, t) for a, t in chunks if a.alive]
         if not chunks:
-            return
+            return 0
+        tr, mt = self.tracer, self.metrics
+        t0 = time.perf_counter() if (tr is not None or mt is not None) \
+            else 0.0
         for be, rows in ((self.base_be,
                           [a.base_row for a, _ in chunks]),
                          (self.small_be,
@@ -823,6 +873,18 @@ class ContinuousScheduler:
                              for a, t in chunks],
                             [a.cursor for a, _ in chunks])
         self.prefill_chunks += 1
+        spent = sum(t for _, t in chunks)
+        if tr is not None or mt is not None:
+            t1 = time.perf_counter()
+            if mt is not None:
+                mt.chunk_latency.observe(t1 - t0)
+                mt.prefill_tokens.inc(spent)
+            if tr is not None:
+                for a, take in chunks:       # cursors not yet advanced
+                    tr.span(request_track(a.req.request_id), "prefill",
+                            t0, t1, {"from": a.cursor,
+                                     "to": a.cursor + take,
+                                     "prompt": len(a.prompt)})
         bs = self.kv.block_size
         for a, take in chunks:
             a.cursor += take
@@ -850,11 +912,19 @@ class ContinuousScheduler:
                 a.req.prefill_done_at = time.perf_counter()
                 a.state.phase = self.controller.think_phase(a.state)
                 if a.cursor > take:      # took more than one chunk
-                    self._log(f"prefill {a.req.request_id}: done "
-                              f"({a.cursor} tokens)")
+                    self._emit("prefill",
+                               f"prefill {a.req.request_id}: done "
+                               f"({a.cursor} tokens)",
+                               request=a.req.request_id,
+                               cursor=a.cursor, prompt=len(a.prompt),
+                               done=True)
             else:
-                self._log(f"prefill {a.req.request_id}: "
-                          f"{a.cursor}/{len(a.prompt)} tokens")
+                self._emit("prefill",
+                           f"prefill {a.req.request_id}: "
+                           f"{a.cursor}/{len(a.prompt)} tokens",
+                           request=a.req.request_id, cursor=a.cursor,
+                           prompt=len(a.prompt), done=False)
+        return spent
 
     # ------------------------------------------------------------ blocks
     def _grow(self, a: _Active, which: str, n_tokens: int) -> None:
@@ -900,10 +970,15 @@ class ContinuousScheduler:
         victim.req.status = "queued"
         self.queue.appendleft(victim.req)
         self.preemptions += 1
+        if self.metrics is not None:
+            self.metrics.preemptions.inc()
         mid = f" (mid-prefill at {victim.cursor}/{len(victim.prompt)})" \
             if victim.state.phase == "prefill" else ""
-        self._log(f"preempt {victim.req.request_id}: KV block pool "
-                  f"exhausted{mid}; requeued for recompute")
+        self._emit("preempt",
+                   f"preempt {victim.req.request_id}: KV block pool "
+                   f"exhausted{mid}; requeued for recompute",
+                   request=victim.req.request_id,
+                   phase=victim.state.phase, cursor=victim.cursor)
 
     def _release(self, a: _Active) -> None:
         """Release everything an admitted request holds: outstanding
@@ -948,7 +1023,10 @@ class ContinuousScheduler:
         elif status == STATUS_FAILED:
             self.failures += 1
             self.base_be.meter.req_failed += 1
-        self._log(f"{status} {req.request_id}: {message}")
+        if self.metrics is not None:
+            self.metrics.requests.inc(status=status)
+        self._emit(status, f"{status} {req.request_id}: {message}",
+                   request=req.request_id, code=code)
 
     def _cancel(self, a: _Active, status: str, code: str,
                 message: str) -> None:
@@ -1082,8 +1160,10 @@ class ContinuousScheduler:
         req.blocked_reason = f"quarantined: {code}; retrying without " \
                              f"speculation"
         self.queue.appendleft(req)
-        self._log(f"quarantine {req.request_id}: {code} — requeued, "
-                  f"speculation disabled (retry {req.retries})")
+        self._emit("quarantine",
+                   f"quarantine {req.request_id}: {code} — requeued, "
+                   f"speculation disabled (retry {req.retries})",
+                   request=req.request_id, code=code, retry=req.retries)
 
     def _health_scan(self) -> None:
         """Per-tick engine-health guard: any live row whose host-side
@@ -1120,6 +1200,8 @@ class ContinuousScheduler:
         current phase as per-phase batched calls.  Returns True while
         there is work left."""
         self.ticks += 1
+        tr, mt = self.tracer, self.metrics
+        t_tick0 = time.perf_counter() if tr is not None else 0.0
         # fault injection first: arm this tick's plan entries (pool holds
         # claim/release, stall windows open) so the rest of the tick sees
         # them; a stalled tick skips admission/prefill/phases but still
@@ -1150,17 +1232,27 @@ class ContinuousScheduler:
         rows_busy = min(1.0, (busy + len(self.queue)) / self.base_be.batch)
         for ev in self.res.observe_tick(self.ticks, occ, rows_busy,
                                         len(self.queue)):
-            self._log(ev)
+            # degradation-ladder transitions (either direction), rendered
+            # verbatim — the controller already formats the line
+            self._emit("degrade", ev, tick=self.ticks,
+                       level=self.res.level,
+                       pressure=round(self.res.pressure, 4))
         tc = self.res.tick_config()
+        spent = 0
+        comp: Dict[str, int] = {}
         if not stalled:
             self._admit(key, tc,
                         quota=self.res.admit_quota(len(self.active)))
+            if tr is not None:
+                # batch composition entering the tick's phase execution
+                for a in self.active:
+                    comp[a.state.phase] = comp.get(a.state.phase, 0) + 1
             # Stall-free scheduling: the tick's prefill work is bounded
             # by the tick config's prefill budget (chunked mode), so the
             # decode/speculation phases below run EVERY tick regardless
             # of how long the queued prompts are — a long admission
             # never starves in-flight decodes.
-            self._prefill_tick(tc)
+            spent = self._prefill_tick(tc)
             # One tick = one reasoning step for every in-flight request:
             # each phase batch is collected FRESH so a request drafted
             # this tick is verified this tick (and, on reject,
@@ -1201,6 +1293,30 @@ class ContinuousScheduler:
         self._finish()
         if self.audit_enabled:
             self._audit()
+        if mt is not None:
+            mt.ticks.inc()
+            mt.queue_depth.set(len(self.queue))
+            mt.pressure.set(self.res.pressure)
+            mt.degrade_level.set(self.res.level)
+            for w, p in self.pools.items():
+                mt.pool_occupancy.set(p.num_used / p.num_blocks, pool=w)
+        if tr is not None:
+            t_tick1 = time.perf_counter()
+            tr.span(TRACK_SCHED, "tick", t_tick0, t_tick1, {
+                "tick": self.ticks, "queue": len(self.queue),
+                "active": len(self.active), "batch": comp,
+                "occupancy": round(occ, 4),
+                "pressure": round(self.res.pressure, 4),
+                "level": self.res.level, "prefill_tokens": spent})
+            tr.counter("kv_occupancy",
+                       {w: round(p.num_used / p.num_blocks, 4)
+                        for w, p in self.pools.items()}, t=t_tick1)
+            tr.counter("pressure",
+                       {"pressure": round(self.res.pressure, 4),
+                        "level": float(self.res.level)}, t=t_tick1)
+            tr.counter("queue_depth",
+                       {"queued": float(len(self.queue)),
+                        "active": float(len(self.active))}, t=t_tick1)
         working = bool(self.active or self.queue)
         if not working and self.faults is not None:
             # end of run: drop any pool holds whose expiry tick the
@@ -1212,8 +1328,17 @@ class ContinuousScheduler:
     def _phase_acts(self, phase: str, fn) -> None:
         acts = self._guard(phase, [a for a in self.active
                                    if a.state.phase == phase])
-        if acts:
+        if not acts:
+            return
+        tr = self.tracer
+        if tr is None:
             fn(acts)
+            return
+        t0 = time.perf_counter()
+        fn(acts)
+        t1 = time.perf_counter()
+        for a in acts:
+            tr.span(request_track(a.req.request_id), phase, t0, t1)
 
     def drain(self, key: jax.Array) -> List[Request]:
         """Tick until queue and batch are empty; returns the requests
@@ -1244,6 +1369,22 @@ class ContinuousScheduler:
                 if a.req.admitted_at is not None else a.req.e2e_latency
             self.res.observe_finish(a.req.ttft, a.req.tpot(n_out),
                                     service)
+            if self.tracer is not None:
+                self.tracer.instant(request_track(a.req.request_id),
+                                    "done",
+                                    {"status": STATUS_OK,
+                                     "tokens": n_out,
+                                     "steps": len(a.state.steps)},
+                                    t=a.req.finished_at)
+            if self.metrics is not None:
+                mt = self.metrics
+                mt.requests.inc(status=STATUS_OK)
+                mt.output_tokens.inc(n_out)
+                if a.req.ttft is not None:
+                    mt.ttft.observe(a.req.ttft)
+                tpot = a.req.tpot(n_out)
+                if tpot is not None:
+                    mt.tpot.observe(tpot)
             self.done.append(a.req)
             self._release(a)
 
@@ -1332,6 +1473,11 @@ class ContinuousScheduler:
                 # delimiter owed to the base context; flushed in this
                 # tick's merged close/delim extend
                 a.pending_base.append(delim)
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        request_track(a.req.request_id), "accept",
+                        {"utility": round(utility, 4),
+                         "tokens": len(a.body)})
             else:
                 self._reject(a, utility)
 
@@ -1344,6 +1490,10 @@ class ContinuousScheduler:
         a.small_seq.restore(a.s_seq_snap)
         a.b_seq_snap = a.s_seq_snap = None
         self.controller.note_reject(a.state, a.body, utility)
+        if self.tracer is not None:
+            self.tracer.instant(request_track(a.req.request_id), "reject",
+                                {"utility": round(utility, 4),
+                                 "tokens": len(a.body)})
 
     def _base_decode_batch(self, fall: List[_Active], ans: List[_Active],
                            tc: Optional[TickConfig] = None) -> None:
@@ -1368,6 +1518,8 @@ class ContinuousScheduler:
         acts = fall + ans
         if not acts:
             return
+        tr, mt = self.tracer, self.metrics
+        t_dec0 = time.perf_counter() if tr is not None else 0.0
         keys = self._split_keys(acts)
         budgets = [ctrl.max_step_tokens(a.state) for a in fall] \
             + [cfg.answer_max_tokens] * len(ans)
@@ -1387,9 +1539,25 @@ class ContinuousScheduler:
             items = [SpecRow(acts[i].base_row, acts[i].small_row,
                              budgets[i], stops[i], keys[i])
                      for i in spec_idx]
+            on_round = None
+            if tr is not None or mt is not None:
+                # per-round telemetry: one span per judged row on its
+                # request track (proposed/accepted draft tokens), one
+                # accepted-length observation per row per round
+                def on_round(rnd, rt0, rt1, infos, _sub=sub):
+                    for j, proposed, accepted in infos:
+                        a = _sub[j]
+                        if tr is not None:
+                            tr.span(request_track(a.req.request_id),
+                                    "spec_round", rt0, rt1,
+                                    {"round": rnd, "proposed": proposed,
+                                     "accepted": accepted})
+                        if mt is not None:
+                            mt.accepted_length.observe(accepted)
+                            mt.spec_rounds.inc()
             s_outs, round_stats = self.spec_be.decode_rows(
                 items, cfg.sampling, _SchedulerLedger(self, sub),
-                gamma=tc.gamma)
+                gamma=tc.gamma, on_round=on_round)
             for i, ids, s in zip(spec_idx, s_outs, round_stats):
                 outs[i] = ids
                 if acts[i].alive:
@@ -1422,6 +1590,14 @@ class ContinuousScheduler:
             if a.alive and ids is not None:
                 a.state.answer_ids = ids
                 a.state.phase = "done"
+        if tr is not None:
+            t_dec1 = time.perf_counter()
+            for a in fall:
+                tr.span(request_track(a.req.request_id), "fallback",
+                        t_dec0, t_dec1)
+            for a in ans:
+                tr.span(request_track(a.req.request_id), "answer",
+                        t_dec0, t_dec1)
 
     def _flush_close_batch(self) -> None:
         """Move closing requests to the answer phase and flush every owed
@@ -1443,8 +1619,15 @@ class ContinuousScheduler:
                 items.append(a)
         if not items:
             return
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
         self.base_be.extend_rows([a.base_row for a in items],
                                  [a.pending_base for a in items])
+        if tr is not None:
+            t1 = time.perf_counter()
+            for a in items:
+                tr.span(request_track(a.req.request_id), "close", t0, t1,
+                        {"tokens": len(a.pending_base)})
         for a in items:
             self._grow(a, "base", len(a.pending_base))
             a.pending_base = []

@@ -43,7 +43,8 @@ routine."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +122,10 @@ class BatchSpecEngine:
 
     def decode_rows(self, items: Sequence[SpecRow], params: SamplingParams,
                     ledger: Optional[SpecLedger] = None,
-                    gamma: Optional[int] = None
+                    gamma: Optional[int] = None,
+                    on_round: Optional[
+                        Callable[[int, float, float,
+                                  List[Tuple[int, int, int]]], None]] = None
                     ) -> Tuple[List[List[int]], List[SpecDecodeStats]]:
         """Run batched speculative decoding until every row hits its stop
         or budget.  Returns (emitted ids per row — bit-identical to the
@@ -131,7 +135,11 @@ class BatchSpecEngine:
         overrides the engine's configured draft length for THIS call —
         the degradation ladder's shrink-gamma rung (greedy outputs are
         gamma-invariant; sampled outputs are not bitwise, same as any
-        gamma change)."""
+        gamma change).  ``on_round`` is the telemetry hook: after each
+        round it receives ``(round_idx, t0, t1, infos)`` with ``infos``
+        one ``(item_idx, proposed, accepted)`` per row the round judged
+        (wall-clock bracket in ``time.perf_counter()`` seconds; pure
+        observation — it must not touch engine state)."""
         ledger = ledger or SpecLedger()
         n = len(items)
         assert n <= self.base_be.batch
@@ -155,8 +163,11 @@ class BatchSpecEngine:
         if gam > self.gamma:
             raise ValueError("per-call gamma above the configured gamma "
                              "would exceed the admission headroom")
+        rounds = 0
 
         while True:
+            t_round0 = time.perf_counter() if on_round is not None else 0.0
+            round_info: List[Tuple[int, int, int]] = []
             active = [i for i in range(n)
                       if not done[i] and ledger.alive(i)
                       and items[i].budget > len(out[i])]
@@ -267,6 +278,8 @@ class BatchSpecEngine:
                     stats[i].proposed += ga
                     stats[i].accepted += int(n_acc[i])
                     stats[i].rounds += 1
+                    if on_round is not None:
+                        round_info.append((i, ga, int(n_acc[i])))
                     self.base_be.meter.spec_rounds += 1
                     self.base_be.meter.spec_proposed += ga
                     self.base_be.meter.spec_accepted += int(n_acc[i])
@@ -302,4 +315,8 @@ class BatchSpecEngine:
                     [pending[i] for i in fin])
                 for i in fin:
                     pending[i] = None
+            if on_round is not None and round_info:
+                on_round(rounds, t_round0, time.perf_counter(),
+                         round_info)
+            rounds += 1
         return out, stats

@@ -225,8 +225,7 @@ def summarize(handles: Sequence[Request], wall_s: float,
     that also met their deadline and the optional ``slo_tpot_s`` bound,
     per second — make the overload benchmarks honest: a run that sheds
     half its load cannot claim the throughput of the half it kept."""
-    ok = [h for h in handles if h.status == "ok" or
-          (h.result is not None and h.status == "queued")]
+    ok = [h for h in handles if h.status == "ok"]
     lats = sorted(h.e2e_latency for h in ok if h.e2e_latency is not None)
     toks = sum(len(h.result.thinking_ids) + len(h.result.answer_ids)
                for h in ok if h.result is not None)

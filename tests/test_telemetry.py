@@ -1,0 +1,334 @@
+"""Structured tracing & metrics: Chrome-trace schema round-trip (spans
+nest inside request lifetimes, analyzer validation passes), ring-buffer
+bounding, structured-event back-compat rendering, Prometheus exposition,
+token identity of traced vs untraced runs (greedy / sampled /
+spec-decode / prefix-cache), and the sequential-path ok-status stamping
+regression."""
+
+import importlib.util
+import json
+import os
+import random
+from collections import defaultdict
+
+import jax
+import pytest
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.scheduler import ContinuousScheduler, Scheduler
+from repro.serving.telemetry import (MetricsRegistry, SchedEvent,
+                                     ServingMetrics, Tracer)
+from repro.serving.workload import expand_best_of_n, summarize
+from repro.tokenizer import toy as tk
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BASE_CFG = ModelConfig(name="tb", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=tk.VOCAB_SIZE).validate()
+SMALL_CFG = ModelConfig(name="ts", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+
+
+def _load_trace_report():
+    spec = importlib.util.spec_from_file_location(
+        "trace_report", os.path.join(ROOT, "tools", "trace_report.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    return (Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256),
+            Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256))
+
+
+def _mk_controller(engine_pair, temperature=0.0, spec=False, gamma=3,
+                   threshold=5.0, token_budget=48, max_steps=6):
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(threshold),
+                           token_budget=token_budget, max_steps=max_steps,
+                           use_spec_decode=spec, spec_gamma=gamma,
+                           sampling=SamplingParams(temperature=temperature))
+    return SpecReason(base, small, cfg)
+
+
+def _mk_sched(ctrl, *, tracer=None, metrics=None, prefix_cache=True,
+              max_prefill_tokens=16, on_event=None):
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    return ContinuousScheduler(ctrl, kv, max_batch=4,
+                               context_capacity=128,
+                               prefix_cache=prefix_cache,
+                               chunked_prefill=True,
+                               max_prefill_tokens=max_prefill_tokens,
+                               on_event=on_event,
+                               tracer=tracer, metrics=metrics)
+
+
+def _workload(n_requests=3, seed=0, min_steps=8, max_steps=10):
+    rng = random.Random(seed)
+    reqs = [tasks.sample_task(rng, min_steps=min_steps, max_steps=max_steps)
+            for _ in range(n_requests)]
+    keys = [jax.random.PRNGKey(100 * seed + i) for i in range(n_requests)]
+    return reqs, keys
+
+
+def _drain(cs, reqs, keys):
+    handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    cs.drain(jax.random.PRNGKey(9))
+    return handles
+
+
+def _assert_identical(traced, untraced):
+    for h_on, h_off in zip(traced, untraced):
+        assert h_on.result is not None and h_off.result is not None
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+
+
+# ------------------------------------------------- structured events
+
+
+def test_sched_event_is_backward_compatible_string():
+    """on_event consumers that pattern-match strings keep working: the
+    event IS the legacy message; structured consumers read kind/fields."""
+    ev = SchedEvent("admit", "admit ab12cd34: prompt=20 cached=0 "
+                    "first_chunk=16", {"request": "ab12cd34",
+                                       "prompt": 20, "cached": 0})
+    assert isinstance(ev, str)
+    assert ev == "admit ab12cd34: prompt=20 cached=0 first_chunk=16"
+    assert ev.startswith("admit ")
+    assert ev.kind == "admit"
+    assert ev.fields["request"] == "ab12cd34"
+    assert ev.as_dict()["prompt"] == 20
+    assert ev.as_dict()["message"].startswith("admit ")
+
+
+def test_on_event_receives_legacy_strings_and_structure(engine_pair):
+    """The scheduler's on_event sink still sees the legacy line formats
+    — now as SchedEvent instances carrying kind + fields."""
+    reqs, keys = _workload(n_requests=1, seed=8, min_steps=12,
+                           max_steps=12)
+    events = []
+    ctrl = _mk_controller(engine_pair)
+    _drain(_mk_sched(ctrl, on_event=events.append), reqs, keys)
+    assert all(isinstance(e, SchedEvent) for e in events)
+    admits = [e for e in events if e.kind == "admit"]
+    assert admits and admits[0].startswith("admit ")
+    assert "request" in admits[0].fields
+    chunks = [e for e in events if e.kind == "prefill"]
+    assert any(e.startswith("prefill ") and "/" in e for e in chunks)
+    assert any("done" in e for e in chunks)
+
+
+# ------------------------------------------------------------- tracer
+
+
+def test_ring_buffer_bounds_a_long_run():
+    tr = Tracer(buffer=16)
+    t = tr.now()
+    for i in range(200):
+        tr.span("scheduler", f"tick", t, t + 1e-4, {"tick": i})
+    assert len(tr.entries()) == 16
+    assert tr.recorded == 200
+    assert tr.dropped == 184
+    # oldest entries were the ones overwritten
+    kept = [args["tick"] for _, _, _, _, _, args in tr.entries()]
+    assert kept == list(range(184, 200))
+    # the export reports the loss instead of hiding it
+    doc = tr.chrome_trace()
+    assert doc["otherData"]["dropped"] == 184
+    with pytest.raises(ValueError):
+        Tracer(buffer=0)
+
+
+def test_chrome_trace_schema():
+    """Exporter structure: process/thread metadata for every track,
+    microsecond complete events sorted by ts, instants with scope."""
+    tr = Tracer()
+    t = tr.now()
+    tr.span("engine:base", "prefill", t, t + 0.25, {"rows": 2})
+    tr.span("req:r1", "queued", t - 99.0, t)    # pre-epoch start clamps
+    tr.instant("req:r1", "done", {"status": "ok"}, t=t + 0.5)
+    tr.counter("pressure", {"pressure": 0.5}, t=t + 0.1)
+    doc = tr.chrome_trace()
+    evs = doc["traceEvents"]
+    tracks = {e["tid"]: e["args"]["name"] for e in evs
+              if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert set(tracks.values()) == {"engine:base", "req:r1", "counters"}
+    body = [e for e in evs if e["ph"] != "M"]
+    assert [e["ts"] for e in body] == sorted(e["ts"] for e in body)
+    assert all(e["ts"] >= 0 for e in body)
+    x = next(e for e in body if e["ph"] == "X" and e["name"] == "prefill")
+    assert x["dur"] == pytest.approx(0.25e6, rel=1e-3)
+    assert x["args"] == {"rows": 2}
+    i = next(e for e in body if e["ph"] == "i")
+    assert i["s"] == "t" and i["args"]["status"] == "ok"
+    assert any(e["ph"] == "C" for e in body)
+
+
+def test_trace_round_trip_spans_nest_and_cover_lifetime(engine_pair,
+                                                        tmp_path):
+    """The acceptance bar: a traced serving run exports a trace that (a)
+    passes the analyzer's structural validation, (b) gives every
+    ok-request the full queued -> prefill -> ... -> answer chain, and
+    (c) nests every request-phase span inside [queued start, done]."""
+    reqs, keys = _workload(seed=3)
+    ctrl = _mk_controller(engine_pair, spec=True)
+    tr = Tracer()
+    handles = _drain(_mk_sched(ctrl, tracer=tr), reqs, keys)
+    assert all(h.status == "ok" for h in handles)
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.load(open(path))
+
+    rep = _load_trace_report()
+    tracks = rep.validate(doc)          # raises TraceError on malformed
+    spans = defaultdict(list)
+    instants = defaultdict(list)
+    for ev in doc["traceEvents"]:
+        track = tracks.get(ev.get("tid"), "")
+        if not track.startswith("req:"):
+            continue
+        if ev["ph"] == "X":
+            spans[track].append(ev)
+        elif ev["ph"] == "i":
+            instants[track].append(ev)
+    assert len(spans) == len(handles)
+    for track, evs in spans.items():
+        names = {e["name"] for e in evs}
+        assert {"queued", "prefill", "speculate", "answer"} <= names
+        done = [e for e in instants[track] if e["name"] == "done"]
+        assert len(done) == 1 and done[0]["args"]["status"] == "ok"
+        q = next(e for e in evs if e["name"] == "queued")
+        lo, hi = q["ts"], done[0]["ts"]
+        for e in evs:
+            assert lo <= e["ts"] and e["ts"] + e["dur"] <= hi + 1.0, \
+                f"{track}: {e['name']} outside request lifetime"
+    # the full analyzer also renders from it without failing
+    assert rep.main([str(path)]) == 0
+
+
+# ----------------------------------------------------- token identity
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_traced_run_token_identical(engine_pair, temperature):
+    """Tracing must observe, never perturb: greedy and sampled runs
+    produce identical tokens with the tracer on vs off."""
+    reqs, keys = _workload(seed=4)
+    ctrl = _mk_controller(engine_pair, temperature=temperature)
+    on = _drain(_mk_sched(ctrl, tracer=Tracer()), reqs, keys)
+    off = _drain(_mk_sched(ctrl), reqs, keys)
+    _assert_identical(on, off)
+
+
+def test_traced_spec_decode_token_identical(engine_pair):
+    """Hierarchical speculation with per-round telemetry (on_round spans
+    + accepted-length metrics) stays token- and stats-identical."""
+    reqs, keys = _workload(seed=5)
+    ctrl = _mk_controller(engine_pair, spec=True)
+    on = _drain(_mk_sched(ctrl, tracer=Tracer(), metrics=ServingMetrics()),
+                reqs, keys)
+    off = _drain(_mk_sched(ctrl), reqs, keys)
+    _assert_identical(on, off)
+    for h_on, h_off in zip(on, off):
+        s_on, s_off = h_on.result.spec_stats, h_off.result.spec_stats
+        assert (s_on.proposed, s_on.accepted, s_on.rounds) == \
+            (s_off.proposed, s_off.accepted, s_off.rounds)
+
+
+def test_traced_prefix_cache_token_identical(engine_pair):
+    """Best-of-N through the radix prefix cache: hits and outputs are
+    unchanged by tracing."""
+    rng = random.Random(7)
+    task = tasks.sample_task(rng, min_steps=10, max_steps=10)
+    pairs = expand_best_of_n([(task, jax.random.PRNGKey(0))], 3)
+    reqs = [t for t, _ in pairs]
+    keys = [k for _, k in pairs]
+    ctrl = _mk_controller(engine_pair, temperature=0.8)
+    on = _drain(_mk_sched(ctrl, tracer=Tracer()), reqs, keys)
+    off = _drain(_mk_sched(ctrl), reqs, keys)
+    _assert_identical(on, off)
+    assert [h.cache_hit_tokens for h in on] == \
+        [h.cache_hit_tokens for h in off]
+
+
+# ------------------------------------------------------------ metrics
+
+
+def test_metrics_registry_exposition():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "Requests.", labelnames=("status",))
+    c.inc(status="ok")
+    c.inc(2, status="shed")
+    g = reg.gauge("pressure", "Pressure.")
+    g.set(0.75)
+    h = reg.histogram("lat_seconds", "Latency.", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    text = reg.render()
+    assert '# TYPE reqs_total counter' in text
+    assert 'reqs_total{status="ok"} 1' in text
+    assert 'reqs_total{status="shed"} 2' in text
+    assert "pressure 0.75" in text
+    # histogram buckets are cumulative and +Inf counts everything
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert "lat_seconds_count 3" in text
+    assert h.sum == pytest.approx(5.55)
+    # re-registering returns the same metric; kind mismatch raises
+    assert reg.counter("reqs_total", labelnames=("status",)) is c
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("reqs_total")
+
+
+def test_serving_metrics_populated_by_run(engine_pair, tmp_path):
+    reqs, keys = _workload(seed=6)
+    ctrl = _mk_controller(engine_pair, spec=True)
+    mt = ServingMetrics()
+    handles = _drain(_mk_sched(ctrl, metrics=mt), reqs, keys)
+    n_ok = sum(h.status == "ok" for h in handles)
+    assert mt.requests.value(status="ok") == n_ok == len(handles)
+    assert mt.ticks.value() > 0
+    assert mt.ttft.count == n_ok and mt.ttft.sum > 0
+    assert mt.chunk_latency.count > 0
+    assert mt.spec_rounds.value() > 0
+    assert mt.accepted_length.count == mt.spec_rounds.value()
+    text = mt.render()
+    for name in ("specreason_ttft_seconds_bucket",
+                 "specreason_requests_total",
+                 "specreason_kv_pool_occupancy",
+                 "specreason_pressure"):
+        assert name in text, name
+
+
+# -------------------------------------- sequential status regression
+
+
+def test_sequential_path_stamps_ok_status(engine_pair):
+    """Regression (ISSUE 7 satellite): sequentially-served requests
+    finish with status 'ok', and summarize counts them WITHOUT the old
+    result-but-still-queued workaround."""
+    base, small = engine_pair
+    ctrl = _mk_controller(engine_pair, max_steps=2, token_budget=16)
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    sched = Scheduler(ctrl, kv, context_capacity=256)
+    rng = random.Random(0)
+    for _ in range(3):
+        sched.submit(tasks.sample_task(rng))
+    done = sched.drain(jax.random.PRNGKey(2))
+    assert [d.status for d in done] == ["ok"] * 3
+    stats = summarize(done, wall_s=1.0)
+    assert stats["requests"] == 3

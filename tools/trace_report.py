@@ -1,0 +1,233 @@
+"""Trace analyzer: turn a ``--trace out.json`` Chrome trace-event file
+from the serving driver into human-readable tables.
+
+  python tools/trace_report.py out.json
+
+Three views, all from the one artifact:
+
+* **Waterfall** — per request, the phase timeline in submission order:
+  queued / prefill chunks / speculate / verify / fallback / close /
+  answer spans with start offset and duration, so "where did this
+  request's wall time go" reads top to bottom.
+* **Phase attribution** — per track (scheduler, each engine, requests
+  pooled), total span time per phase name and its share of the trace's
+  wall window.  Engine rows attribute device-dispatch brackets
+  (prefill / decode / extend / feed / cache_seed); request rows
+  attribute scheduler phases.
+* **Speculation funnel** — proposed vs accepted draft tokens summed
+  over every spec_round span, step-level accept/reject instants, and
+  fallback regenerations: the proposed → accepted → fallback shape of
+  the run.
+
+The loader *validates* before it renders — required keys per event
+type, non-negative complete-event durations, in-window timestamps, a
+thread_name metadata row for every tid, and a full phase chain
+(queued → prefill → … → answer → done) for every ok-completed request
+— and exits nonzero on malformed input.  CI runs this against a
+micro-testbed serve run; treat a failure as a telemetry regression,
+not a flake.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# event names that appear on request tracks and mark scheduler phases
+REQUEST_PHASES = ("queued", "prefill", "speculate", "verify", "fallback",
+                  "close", "answer", "spec_round")
+
+
+class TraceError(Exception):
+    """Structural problem in the trace file (malformed export)."""
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise TraceError("missing traceEvents array")
+    return doc
+
+
+def validate(doc: dict) -> dict:
+    """Structural checks; returns {tid: track_name} on success."""
+    events = doc["traceEvents"]
+    tracks = {}
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            tracks[ev["tid"]] = ev["args"]["name"]
+    seen_tids = set()
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None:
+            raise TraceError(f"event {i}: no ph")
+        if ph == "M":
+            continue
+        for key in ("name", "ts", "pid", "tid"):
+            if key not in ev:
+                raise TraceError(f"event {i} ({ph}): missing {key!r}")
+        if ev["ts"] < 0:
+            raise TraceError(f"event {i} ({ev['name']}): ts < 0")
+        if ph == "X":
+            if "dur" not in ev:
+                raise TraceError(f"event {i} ({ev['name']}): X without dur")
+            if ev["dur"] < 0:
+                raise TraceError(f"event {i} ({ev['name']}): dur < 0")
+        elif ph == "i":
+            if ev.get("s") not in ("t", "p", "g"):
+                raise TraceError(f"event {i} ({ev['name']}): instant "
+                                 f"scope {ev.get('s')!r}")
+        elif ph == "C":
+            if not isinstance(ev.get("args"), dict):
+                raise TraceError(f"event {i} ({ev['name']}): counter "
+                                 "without args")
+        elif ph not in ("B", "E"):
+            raise TraceError(f"event {i}: unknown ph {ph!r}")
+        seen_tids.add(ev["tid"])
+    missing = seen_tids - set(tracks)
+    if missing:
+        raise TraceError(f"tids without thread_name metadata: "
+                         f"{sorted(missing)}")
+    # every ok-completed request must carry its full phase chain: the
+    # queued span, at least one prefill chunk, and the answer span that
+    # produced its output (speculate/verify may be absent for requests
+    # that fell straight through, fallback/close for ones that did not)
+    done_ok = {tracks[ev["tid"]]
+               for ev in events
+               if ev.get("ph") == "i" and ev.get("name") == "done"
+               and ev.get("args", {}).get("status") == "ok"}
+    for track in sorted(done_ok):
+        names = {ev["name"] for ev in events
+                 if ev.get("ph") == "X" and tracks[ev["tid"]] == track}
+        for need in ("queued", "prefill", "answer"):
+            if need not in names:
+                raise TraceError(f"{track}: ok-completed but no "
+                                 f"{need!r} span")
+    return tracks
+
+
+def _fmt_ms(us: float) -> str:
+    return f"{us / 1e3:.1f}ms"
+
+
+def waterfall(events: list, tracks: dict) -> str:
+    lines = ["== per-request waterfall =="]
+    by_req = defaultdict(list)
+    for ev in events:
+        track = tracks.get(ev.get("tid"))
+        if (ev.get("ph") == "X" and track and track.startswith("req:")
+                and ev["name"] != "spec_round"):
+            by_req[track].append(ev)
+    if not by_req:
+        return "\n".join(lines + ["(no request spans)"])
+    # submission order = start of each request's queued span
+    order = sorted(by_req, key=lambda r: min(e["ts"] for e in by_req[r]))
+    for track in order:
+        evs = sorted(by_req[track], key=lambda e: (e["ts"], e["dur"]))
+        t0 = evs[0]["ts"]
+        total = max(e["ts"] + e["dur"] for e in evs) - t0
+        lines.append(f"{track}  ({_fmt_ms(total)} total)")
+        for e in evs:
+            args = e.get("args") or {}
+            extra = ""
+            if e["name"] == "prefill" and "to" in args:
+                extra = f"  [{args.get('from', '?')}..{args['to']}" \
+                        f"/{args.get('prompt', '?')}]"
+            lines.append(f"  +{_fmt_ms(e['ts'] - t0):>10}  "
+                         f"{e['name']:<10} {_fmt_ms(e['dur']):>10}{extra}")
+    return "\n".join(lines)
+
+
+def attribution(events: list, tracks: dict) -> str:
+    lines = ["== phase attribution =="]
+    xs = [e for e in events if e.get("ph") == "X"]
+    if not xs:
+        return "\n".join(lines + ["(no spans)"])
+    wall = (max(e["ts"] + e["dur"] for e in xs)
+            - min(e["ts"] for e in xs)) or 1.0
+    # requests pool into one row-group; engines and scheduler stay apart
+    groups = defaultdict(lambda: defaultdict(float))
+    for e in xs:
+        track = tracks.get(e["tid"], "?")
+        group = "requests" if track.startswith("req:") else track
+        groups[group][e["name"]] += e["dur"]
+    lines.append(f"{'track':<28} {'phase':<12} {'time':>10} {'share':>7}")
+    for group in sorted(groups):
+        for name, dur in sorted(groups[group].items(),
+                                key=lambda kv: -kv[1]):
+            lines.append(f"{group:<28} {name:<12} {_fmt_ms(dur):>10} "
+                         f"{dur / wall:>6.1%}")
+    return "\n".join(lines)
+
+
+def funnel(events: list, tracks: dict) -> str:
+    lines = ["== speculation funnel =="]
+    proposed = accepted = rounds = 0
+    step_accept = step_reject = fallbacks = 0
+    for ev in events:
+        name, args = ev.get("name"), ev.get("args") or {}
+        if ev.get("ph") == "X" and name == "spec_round":
+            rounds += 1
+            proposed += args.get("proposed", 0)
+            accepted += args.get("accepted", 0)
+        elif ev.get("ph") == "X" and name == "fallback":
+            fallbacks += 1
+        elif ev.get("ph") == "i" and name == "accept":
+            step_accept += 1
+        elif ev.get("ph") == "i" and name == "reject":
+            step_reject += 1
+    steps = step_accept + step_reject
+    if steps:
+        lines.append(f"steps   : {step_accept}/{steps} accepted "
+                     f"({step_accept / steps:.0%}), "
+                     f"{fallbacks} fallback regenerations")
+    else:
+        lines.append("steps   : none recorded")
+    if rounds:
+        lines.append(f"decode  : {accepted}/{proposed} draft tokens "
+                     f"accepted over {rounds} rounds "
+                     f"(mean {accepted / rounds:.2f}/round)")
+    else:
+        lines.append("decode  : no spec_round spans (token-level spec "
+                     "decode off)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Analyze a serving trace (Chrome trace-event JSON "
+                    "written by --trace).")
+    ap.add_argument("trace", help="path to the trace JSON")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="run the structural checks and exit (CI mode)")
+    args = ap.parse_args(argv)
+    try:
+        doc = load(args.trace)
+        tracks = validate(doc)
+    except (TraceError, OSError, json.JSONDecodeError, KeyError,
+            TypeError) as e:
+        print(f"trace_report: malformed trace: {e}", file=sys.stderr)
+        return 1
+    events = doc["traceEvents"]
+    n_req = sum(1 for t in tracks.values() if t.startswith("req:"))
+    print(f"{args.trace}: {len(events)} events, {len(tracks)} tracks "
+          f"({n_req} requests); recorded="
+          f"{doc.get('otherData', {}).get('recorded', '?')} dropped="
+          f"{doc.get('otherData', {}).get('dropped', '?')}")
+    if args.validate_only:
+        print("structure ok")
+        return 0
+    print()
+    print(waterfall(events, tracks))
+    print()
+    print(attribution(events, tracks))
+    print()
+    print(funnel(events, tracks))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
