@@ -1,5 +1,6 @@
 """Telemetry overhead benchmark: serving throughput with tracing off /
-tracing on / tracing + metrics on.
+tracing on / tracing + metrics on / the full observability plane
+(tracing + metrics + rolling speculation-quality monitors).
 
 The tentpole contract being gated: tracing is zero-cost when off (the
 ``tracer is None`` guard is the only code a traced-less tick executes)
@@ -45,6 +46,7 @@ from repro.models.model import Model
 from repro.sampling.sample import SamplingParams
 from repro.serving.engine import Engine
 from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.monitors import MonitorConfig, Monitors
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.telemetry import ServingMetrics, Tracer
 from repro.serving.workload import run_workload_ticks, summarize
@@ -72,13 +74,15 @@ def _pairs(n: int, ops: int, seed: int):
              jax.random.PRNGKey(3000 + i)) for i in range(n)]
 
 
-def _mk_sched(ctrl, batch: int, tracer=None, metrics=None):
+def _mk_sched(ctrl, batch: int, tracer=None, metrics=None,
+              monitors=None):
     kv = KVManager(ctrl.base.model.cfg, ctrl.small.model.cfg,
                    KVBudget(total_bytes=1 << 26))
     return ContinuousScheduler(ctrl, kv, max_batch=batch,
                                context_capacity=MAX_LEN,
                                prefix_cache=False,
-                               tracer=tracer, metrics=metrics)
+                               tracer=tracer, metrics=metrics,
+                               monitors=monitors)
 
 
 def _run_once(sched, pairs, rep: int):
@@ -116,11 +120,17 @@ def main(argv=None):
         "trace": _mk_sched(ctrl, args.batch, tracer=tracer),
         "trace_metrics": _mk_sched(ctrl, args.batch, tracer=Tracer(),
                                    metrics=ServingMetrics()),
+        # the full observability plane: tracer + metrics + rolling
+        # speculation-quality monitors (window pushes per round/step)
+        "trace_metrics_monitors": _mk_sched(
+            ctrl, args.batch, tracer=Tracer(), metrics=ServingMetrics(),
+            monitors=Monitors(MonitorConfig())),
     }
     for sched in arms.values():
         _run_once(sched, pairs, 0)
     req_s = {k: [] for k in arms}
-    ratios = {"trace": [], "trace_metrics": []}
+    ratios = {"trace": [], "trace_metrics": [],
+              "trace_metrics_monitors": []}
     for rep in range(1, args.reps + 1):
         rs = {k: _run_once(s, pairs, rep)["req_s"]
               for k, s in arms.items()}
@@ -131,10 +141,12 @@ def main(argv=None):
     med = {k: _median(v) for k, v in req_s.items()}
     r_trace = _median(ratios["trace"])
     r_both = _median(ratios["trace_metrics"])
-    for k in ("off", "trace", "trace_metrics"):
-        print(f"{k:14s} req/s {med[k]:7.2f}")
+    r_mon = _median(ratios["trace_metrics_monitors"])
+    for k in ("off", "trace", "trace_metrics", "trace_metrics_monitors"):
+        print(f"{k:22s} req/s {med[k]:7.2f}")
     print(f"traced/untraced req/s: trace {r_trace:.3f}x, trace+metrics "
-          f"{r_both:.3f}x (1.0 = no overhead; gate >= 0.95)")
+          f"{r_both:.3f}x, +monitors {r_mon:.3f}x "
+          f"(1.0 = no overhead; gate >= 0.95)")
 
     out = {
         "bench": "telemetry",
@@ -149,11 +161,12 @@ def main(argv=None):
         # headline gate: tracing-on throughput within 5% of tracing-off
         "req_s_ratio_trace": round(r_trace, 3),
         "req_s_ratio_trace_metrics": round(r_both, 3),
+        "req_s_ratio_trace_metrics_monitors": round(r_mon, 3),
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out} (trace {r_trace:.3f}x, trace+metrics "
-          f"{r_both:.3f}x)")
+          f"{r_both:.3f}x, +monitors {r_mon:.3f}x)")
 
 
 if __name__ == "__main__":

@@ -73,6 +73,27 @@ metrics (TTFT/TPOT/chunk-latency/accepted-length histograms, request
 and token counters, pressure/occupancy gauges) after the run.  Tracing
 never alters outputs: traced runs are token-identical to untraced ones.
 
+**Live observability plane** (continuous scheduler): ``--admin-port P``
+starts a daemon-threaded read-only HTTP server (port 0 = OS-assigned,
+printed as ``[admin] listening on ...``) exposing ``/healthz``,
+``/metrics`` (live Prometheus scrape), ``/status`` (the per-tick
+scheduler snapshot: queue depth, active rows with phase+cursor, pool
+occupancy, pressure, ladder level, fault counters, monitor values),
+``/requests/<id>`` (one request's span timeline) and ``/trace?last=N``
+(a rolling ring slice); ``--admin-linger S`` keeps it up S seconds
+after the run for terminal scrapes.  ``--snapshot-every S`` flushes the
+``--trace``/``--metrics-out`` artifacts periodically during the run
+(atomic renames — an interrupted run still leaves valid telemetry);
+both artifacts are also always flushed in a ``finally``.
+``--monitor-window N`` sizes the rolling speculation-quality monitors
+(token/step acceptance, SLO burn, quarantine rate; 0 disables) that
+ride along whenever the plane is active — a firing monitor feeds the
+overload controller as a pressure input, so sustained acceptance
+collapse walks the ``--degrade`` ladder.  Artifacts for the sequential
+scheduler: ``--metrics-out`` serves end-of-run meter-derived metrics
+(``--trace`` is ignored with a warning — no tick timeline exists
+there).
+
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
   PYTHONPATH=src python -m repro.launch.serve --decode-loop eager -n 2
@@ -98,12 +119,15 @@ from ..core.policies import StaticThreshold
 from ..data import tasks
 from ..data.evaluate import is_correct
 from ..sampling.sample import SamplingParams
+from ..serving.admin import AdminServer, StatusBoard
 from ..serving.faults import FaultInjector, FaultPlan
 from ..serving.kv_manager import KVBudget, KVManager
 from ..serving.loader import load_testbed_engines
+from ..serving.monitors import MonitorConfig, Monitors
 from ..serving.resilience import ResilienceConfig
 from ..serving.scheduler import ContinuousScheduler
-from ..serving.telemetry import ServingMetrics, Tracer
+from ..serving.telemetry import (TTFT_BUCKETS, MetricsRegistry,
+                                 ServingMetrics, Tracer, atomic_write)
 from ..serving.workload import (expand_best_of_n, majority_vote,
                                 poisson_arrivals, run_workload, summarize)
 from ..tokenizer import toy as tk
@@ -161,6 +185,48 @@ def _cache_suffix(h) -> str:
     return f" cache[hit={h.cache_hit_tokens}/{h.prompt_tokens}]"
 
 
+def sequential_metrics(base, small, latencies, out_tokens: int) -> str:
+    """End-of-run Prometheus exposition for the SEQUENTIAL path, derived
+    from the engines' Meters — so an A/B pair of sequential/continuous
+    runs produces comparable ``--metrics-out`` artifacts.  Per-tick
+    gauges (queue depth, pressure, occupancy) do not exist here; the
+    request/token counters, per-engine meter counters and an e2e
+    latency histogram do."""
+    reg = MetricsRegistry()
+    req = reg.counter("specreason_requests_total",
+                      "Terminal request outcomes.",
+                      labelnames=("status",))
+    req.inc(len(latencies), status="ok")
+    out = reg.counter("specreason_output_tokens_total",
+                      "Thinking + answer tokens across finished requests.")
+    out.inc(out_tokens)
+    e2e = reg.histogram("specreason_e2e_latency_seconds",
+                        "End-to-end request latency (s; sequential "
+                        "serving is one request start-to-finish).",
+                        TTFT_BUCKETS)
+    for s in latencies:
+        e2e.observe(s)
+    tok = reg.counter("specreason_engine_tokens_total",
+                      "Engine tokens processed, from the Meters.",
+                      labelnames=("engine", "op"))
+    calls = reg.counter("specreason_engine_calls_total",
+                        "Engine calls issued, from the Meters.",
+                        labelnames=("engine", "op"))
+    spec = reg.counter("specreason_spec_tokens_total",
+                       "Token-level spec-decode draft tokens.",
+                       labelnames=("engine", "kind"))
+    for e in (base, small):
+        m = e.meter
+        tok.inc(m.decode_tokens, engine=e.name, op="decode")
+        tok.inc(m.prefill_tokens, engine=e.name, op="prefill")
+        calls.inc(m.decode_calls, engine=e.name, op="decode")
+        calls.inc(m.prefill_calls, engine=e.name, op="prefill")
+        if m.spec_rounds:
+            spec.inc(m.spec_proposed, engine=e.name, kind="proposed")
+            spec.inc(m.spec_accepted, engine=e.name, kind="accepted")
+    return reg.render()
+
+
 def serve_continuous(args, base, small, reqs, fused: bool) -> None:
     """Continuous-batching serving path: paged-KV admission + per-tick
     speculate/verify batching (serving.scheduler.ContinuousScheduler)."""
@@ -185,7 +251,39 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
             seed=int(seed), n_faults=int(nf) if nf else 4,
             n_requests=len(reqs) * args.num_samples, max_tick=8))
     tracer = Tracer(buffer=args.trace_buffer) if args.trace else None
-    metrics = ServingMetrics() if args.metrics_out else None
+    # the admin plane serves /metrics live, so --admin-port implies a
+    # registry even without --metrics-out
+    admin_on = args.admin_port is not None
+    metrics = ServingMetrics() if (args.metrics_out or admin_on) else None
+    # rolling speculation-quality monitors ride along whenever any part
+    # of the observability plane is active (--monitor-window 0 disables);
+    # they only observe — token outputs are identical monitors-on/off
+    monitors = None
+    if args.monitor_window > 0 and (tracer is not None
+                                    or metrics is not None):
+        monitors = Monitors(MonitorConfig(window=args.monitor_window,
+                                          slo_tpot_s=args.slo_tpot))
+    board = StatusBoard() if admin_on else None
+
+    def _flush_artifacts() -> None:
+        # crash-safe flush: atomic tmp-file renames, shared by the
+        # end-of-run finally and the periodic --snapshot-every path
+        if tracer is not None and args.trace:
+            tracer.export(args.trace)
+        if metrics is not None and args.metrics_out:
+            atomic_write(args.metrics_out, metrics.render())
+
+    on_tick = None
+    if args.snapshot_every is not None and (args.trace
+                                            or args.metrics_out):
+        last_flush = [time.monotonic()]
+
+        def on_tick(snap) -> None:
+            now = time.monotonic()
+            if now - last_flush[0] >= args.snapshot_every:
+                last_flush[0] = now
+                _flush_artifacts()
+
     sched = ContinuousScheduler(ctrl, kv, max_batch=args.batch,
                                 context_capacity=min(base.max_len,
                                                      args.budget + 64),
@@ -196,7 +294,17 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                                 audit=args.audit,
                                 on_event=(lambda s: print(f"[sched] {s}"))
                                 if args.verbose else None,
-                                tracer=tracer, metrics=metrics)
+                                tracer=tracer, metrics=metrics,
+                                monitors=monitors, status_board=board,
+                                on_tick=on_tick)
+    admin = None
+    if admin_on:
+        admin = AdminServer(board=board, metrics=metrics, tracer=tracer,
+                            port=args.admin_port).start()
+        # flush: CI smoke discovers the OS-assigned port from this line
+        # through a block-buffered subprocess pipe
+        print(f"[admin] listening on http://{admin.host}:{admin.port}",
+              flush=True)
     rng = random.Random(args.seed)
     pairs = [(t, jax.random.PRNGKey(1000 * args.seed + i))
              for i, t in enumerate(reqs)]
@@ -211,9 +319,20 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
              if args.num_samples > 1 else None}
             for i in range(len(pairs))]
     arrivals = poisson_arrivals(len(pairs), args.arrival_rate, rng)
-    t0 = time.perf_counter()
-    handles = run_workload(sched, pairs, arrivals, opts=opts)
-    wall = time.perf_counter() - t0
+    try:
+        t0 = time.perf_counter()
+        handles = run_workload(sched, pairs, arrivals, opts=opts)
+        wall = time.perf_counter() - t0
+    finally:
+        # telemetry artifacts land even when the run is interrupted or
+        # faults out (the crash-safe flush contract); prints are flushed
+        # so a piped CI smoke can sequence its scrapes on them
+        _flush_artifacts()
+        if tracer is not None:
+            print(f"[trace] {args.trace}: {len(tracer.entries())} "
+                  f"events ({tracer.dropped} dropped)", flush=True)
+        if metrics is not None and args.metrics_out:
+            print(f"[metrics] {args.metrics_out}", flush=True)
     tag = "hierspec" if args.spec_decode else "continuous"
     for i, h in enumerate(handles):
         res = h.result
@@ -285,15 +404,18 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                   for w, s in sched.cache_stats().items()
                   for k, v in s.items() if k in ("hit_rate",
                                                  "evicted_blocks")})
-    if tracer is not None:
-        tracer.export(args.trace)
-        print(f"[trace] {args.trace}: {len(tracer.entries())} events "
-              f"({tracer.dropped} dropped)")
-    if metrics is not None:
-        with open(args.metrics_out, "w") as f:
-            f.write(metrics.render())
-        print(f"[metrics] {args.metrics_out}")
-    print(json.dumps(stats))
+    if monitors is not None and monitors.alerts:
+        for ev in monitors.alerts:
+            print(f"[monitor] {ev}")
+    print(json.dumps(stats), flush=True)
+    if admin is not None:
+        if args.admin_linger > 0:
+            # keep the endpoints up so a terminal scrape deterministically
+            # sees the same bytes the .prom file got
+            print(f"[admin] lingering {args.admin_linger:g}s for final "
+                  f"scrapes", flush=True)
+            time.sleep(args.admin_linger)
+        admin.stop()
 
 
 def main(argv=None):
@@ -414,6 +536,28 @@ def main(argv=None):
                     help="tracer ring-buffer capacity in events; the "
                          "oldest events are dropped beyond this "
                          "(default 65536)")
+    ap.add_argument("--admin-port", type=int, default=None, metavar="PORT",
+                    help="continuous scheduler: start the read-only admin "
+                         "HTTP plane on 127.0.0.1:PORT (0 = OS-assigned, "
+                         "printed) — /healthz, /metrics (live Prometheus "
+                         "scrape), /status (per-tick scheduler snapshot), "
+                         "/requests/<id>, /trace?last=N")
+    ap.add_argument("--admin-linger", type=float, default=0.0, metavar="S",
+                    help="keep the admin endpoints up S seconds after the "
+                         "run drains (terminal scrapes see the same bytes "
+                         "the artifacts got); default 0")
+    ap.add_argument("--snapshot-every", type=float, default=None,
+                    metavar="S",
+                    help="flush the --trace/--metrics-out artifacts every "
+                         "S seconds during the run (atomic renames) in "
+                         "addition to the end-of-run flush")
+    ap.add_argument("--monitor-window", type=int, default=64, metavar="N",
+                    help="rolling speculation-quality monitor window in "
+                         "samples (token/step acceptance, SLO burn, "
+                         "quarantine rate; active whenever --trace/"
+                         "--metrics-out/--admin-port is; 0 disables); a "
+                         "firing monitor feeds the overload controller "
+                         "as a pressure input (see --degrade)")
     args = ap.parse_args(argv)
     if args.max_prefill_tokens < 1:
         ap.error("--max-prefill-tokens must be >= 1")
@@ -430,9 +574,29 @@ def main(argv=None):
                  "scheduler; add --scheduler continuous")
     if args.trace_buffer < 1:
         ap.error("--trace-buffer must be >= 1")
-    if args.scheduler != "continuous" and (args.trace or args.metrics_out):
-        ap.error("--trace/--metrics-out ride on the continuous "
-                 "scheduler; add --scheduler continuous")
+    if args.monitor_window < 0:
+        ap.error("--monitor-window must be >= 0")
+    if args.snapshot_every is not None and args.snapshot_every <= 0:
+        ap.error("--snapshot-every must be > 0")
+    if args.admin_linger < 0:
+        ap.error("--admin-linger must be >= 0")
+    if args.scheduler != "continuous" and (
+            args.admin_port is not None or args.snapshot_every is not None):
+        ap.error("--admin-port/--snapshot-every ride on the continuous "
+                 "scheduler (the admin plane is fed by per-tick "
+                 "snapshots); add --scheduler continuous")
+    # --trace/--metrics-out on the sequential path: warn instead of
+    # erroring so A/B runs produce comparable artifacts — the Meter
+    # counters back an end-of-run exposition; a tick timeline does not
+    # exist sequentially, so --trace is ignored
+    if args.scheduler != "continuous" and args.trace:
+        print("[warn] --trace is ignored on the sequential scheduler "
+              "(no tick timeline exists); use --scheduler continuous "
+              "for span traces", flush=True)
+    if args.scheduler != "continuous" and args.metrics_out:
+        print("[warn] sequential scheduler: --metrics-out serves "
+              "end-of-run meter-derived metrics only (no per-tick "
+              "gauges)", flush=True)
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "
                  "only; drop --scheme or use the sequential scheduler")
@@ -470,30 +634,42 @@ def main(argv=None):
 
     schemes = SCHEMES if args.scheme == "all" else (args.scheme,)
 
-    for scheme in schemes:
-        lat, acc, toks = [], [], []
-        for i, task in enumerate(reqs):
-            key = jax.random.PRNGKey(1000 * args.seed + i)
-            res = run_scheme(scheme, base, small, task, key, args.budget,
-                             args.threshold, args.temperature, fused=fused)
-            ok = is_correct(task, res.answer_ids)
-            lat.append(res.wall_time)
-            acc.append(ok)
-            toks.append(res.n_thinking_tokens)
-            print(f"[{scheme}] req{i}: {'OK ' if ok else 'BAD'} "
-                  f"{res.wall_time:.2f}s think={res.n_thinking_tokens}"
-                  f"{_spec_suffix(res)} "
-                  f"answer={tk.detok(res.answer_ids)}")
-            if args.meters:
-                for name, m in res.meters.items():
-                    print(_meter_line(name, m))
-        print(json.dumps({
-            "scheme": scheme,
-            "decode_loop": args.decode_loop,
-            "mean_latency_s": sum(lat) / len(lat),
-            "accuracy": sum(acc) / len(acc),
-            "mean_thinking_tokens": sum(toks) / len(toks),
-        }))
+    all_lat, all_out = [], 0
+    try:
+        for scheme in schemes:
+            lat, acc, toks = [], [], []
+            for i, task in enumerate(reqs):
+                key = jax.random.PRNGKey(1000 * args.seed + i)
+                res = run_scheme(scheme, base, small, task, key,
+                                 args.budget, args.threshold,
+                                 args.temperature, fused=fused)
+                ok = is_correct(task, res.answer_ids)
+                lat.append(res.wall_time)
+                acc.append(ok)
+                toks.append(res.n_thinking_tokens)
+                all_lat.append(res.wall_time)
+                all_out += res.n_thinking_tokens + len(res.answer_ids)
+                print(f"[{scheme}] req{i}: {'OK ' if ok else 'BAD'} "
+                      f"{res.wall_time:.2f}s think={res.n_thinking_tokens}"
+                      f"{_spec_suffix(res)} "
+                      f"answer={tk.detok(res.answer_ids)}")
+                if args.meters:
+                    for name, m in res.meters.items():
+                        print(_meter_line(name, m))
+            print(json.dumps({
+                "scheme": scheme,
+                "decode_loop": args.decode_loop,
+                "mean_latency_s": sum(lat) / len(lat),
+                "accuracy": sum(acc) / len(acc),
+                "mean_thinking_tokens": sum(toks) / len(toks),
+            }))
+    finally:
+        if args.metrics_out:
+            # same crash-safe atomic flush as the continuous path
+            atomic_write(args.metrics_out,
+                         sequential_metrics(base, small, all_lat,
+                                            all_out))
+            print(f"[metrics] {args.metrics_out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -98,6 +98,13 @@ class BatchEngine:
         state = model.init_state(batch, capacity)
         self.state = dataclasses.replace(
             state, pos=jnp.zeros((batch,), jnp.int32))
+        # static per-token KV footprint (bytes across k+v, all layers) —
+        # the cost annotation on engine-call bracket spans (est. KV bytes
+        # moved); zero for cache-less models
+        k = self.state.k
+        self._kv_token_bytes = 0 if k is None else (
+            int(k.shape[0]) * 2 * int(k.shape[3]) * int(k.shape[4])
+            * k.dtype.itemsize)
         vocab = model.cfg.vocab_size
         self.pos = np.zeros(batch, np.int64)          # host mirror of pos
         self.last_logits = np.zeros((batch, vocab), np.float32)
@@ -192,6 +199,25 @@ class BatchEngine:
                 return fn(*args)
         return fn(*args)
 
+    def _bracket(self, op: str, t0: float, td: float, t1: float,
+                 args: dict) -> None:
+        """Record one engine-call bracket with host/device attribution:
+        the parent span ``<op>`` over [t0, t1) plus two sub-spans —
+        ``<op>.dispatch`` over [t0, td) (host side: argument staging +
+        the jitted call, which returns as soon as the device work is
+        enqueued) and ``<op>.block_until_ready`` over [td, t1) (the wait
+        for device completion — the device-bound window).  Analyzer
+        views must not sum the sub-spans INTO the parent (they tile it);
+        tools/trace_report.py's attribution view excludes them and its
+        hostdev view is built from them.  Caller guards on ``tracer is
+        not None``."""
+        tr = self.tracer
+        track = engine_track(self.name)
+        tr.span(track, op, t0, t1, args)
+        tr.span(track, f"{op}.dispatch", t0, td, {"side": "host"})
+        tr.span(track, f"{op}.block_until_ready", td, t1,
+                {"side": "device"})
+
     def _prefill_fn(self, cap_eff: int) -> Callable:
         """Batched prefill on a ``cap_eff``-slot cache slice (merged back
         afterwards) — same occupied-prefix discipline as the decode loop."""
@@ -254,20 +280,27 @@ class BatchEngine:
         # unclamped (uninvolved rows write their pads just past their pos)
         live = [i for i in range(self.batch) if self._live[i]]
         need = max(int(self.pos[i]) for i in live) + bucket
-        fn = self._prefill_fn(self._cap_bucket(need))
+        cap_eff = self._cap_bucket(need)
+        fn = self._prefill_fn(cap_eff)
         self._sync_pos()
         t0 = time.perf_counter()
         logits, new_state = self._dispatch(op, fn, self.params,
                                            jnp.asarray(toks), self.state)
+        td = time.perf_counter()                   # dispatch returned
         logits = jax.block_until_ready(logits)     # the ONE host sync
         t1 = time.perf_counter()
         self.meter.prefill_time += t1 - t0
         self.meter.prefill_tokens += bucket * len(rows)
         self.meter.prefill_calls += 1
         if self.tracer is not None:
-            self.tracer.span(engine_track(self.name), op, t0, t1,
-                             {"rows": len(rows), "tokens": sum(lens),
-                              "bucket": bucket})
+            # est. KV bytes: tokens newly written plus each involved
+            # row's attended prefix window (static annotation, not a
+            # measurement)
+            self._bracket(op, t0, td, t1,
+                          {"rows": len(rows), "tokens": sum(lens),
+                           "bucket": bucket,
+                           "kv_bytes": self._kv_token_bytes
+                           * (sum(lens) + len(rows) * cap_eff)})
         # per-row position advance: involved rows by their REAL length,
         # uninvolved rows not at all (their pad chunk wrote past pos only)
         for r, n in zip(rows, lens):
@@ -492,6 +525,7 @@ class BatchEngine:
             self.params, self.state, jnp.asarray(self.last_logits),
             jnp.asarray(key_mat), stop_arr, jnp.asarray(stop_mask),
             jnp.asarray(n_max), jnp.asarray(greedy))
+        td = time.perf_counter()                        # dispatch returned
         toks = np.asarray(jax.block_until_ready(toks))  # the ONE host sync
         n = np.asarray(n)
         t1 = time.perf_counter()
@@ -499,8 +533,11 @@ class BatchEngine:
         self.meter.decode_tokens += int(n.sum())
         self.meter.decode_calls += 1
         if self.tracer is not None:
-            self.tracer.span(engine_track(self.name), "decode", t0, t1,
-                             {"rows": len(rows), "tokens": int(n.sum())})
+            ntok = int(n.sum())
+            self._bracket("decode", t0, td, t1,
+                          {"rows": len(rows), "tokens": ntok,
+                           "kv_bytes": self._kv_token_bytes
+                           * (ntok + len(rows) * cap_eff)})
 
         lg = np.asarray(logits, np.float32)
         out: List[List[int]] = []
@@ -633,12 +670,18 @@ class BatchEngine:
             self.pos[row] = len(slots) * bs
         if self.tracer is not None:
             # dispatch-side bracket only: the seed is deliberately not
-            # host-synced (it overlaps the admission tick's later work)
-            self.tracer.span(engine_track(self.name), "cache_seed", t0,
-                             time.perf_counter(),
-                             {"rows": len(rows),
-                              "tokens": sum(len(s) * bs
-                                            for s in slot_lists)})
+            # host-synced (it overlaps the admission tick's later work),
+            # so the whole window is host time — one .dispatch sub-span,
+            # no .block_until_ready
+            td = time.perf_counter()
+            tokens = sum(len(s) * bs for s in slot_lists)
+            track = engine_track(self.name)
+            self.tracer.span(track, "cache_seed", t0, td,
+                             {"rows": len(rows), "tokens": tokens,
+                              "kv_bytes": 2 * tokens
+                              * self._kv_token_bytes})
+            self.tracer.span(track, "cache_seed.dispatch", t0, td,
+                             {"side": "host"})
 
     # -------------------------------------------------------------- feed
     def _feed_fn(self, cap_eff: int) -> Callable:
@@ -697,21 +740,25 @@ class BatchEngine:
             toks[r] = t
             active[r] = True
         need = max(int(self.pos[i]) for i in live) + 1
-        fn = self._feed_fn(self._cap_bucket(need))
+        cap_eff = self._cap_bucket(need)
+        fn = self._feed_fn(cap_eff)
         self._sync_pos()
         t0 = time.perf_counter()
         logits, new_state = self._dispatch("feed", fn,
                                            self.params, self.state,
                                            jnp.asarray(toks),
                                            jnp.asarray(active))
+        td = time.perf_counter()                   # dispatch returned
         logits = jax.block_until_ready(logits)     # the ONE host sync
         t1 = time.perf_counter()
         self.meter.decode_time += t1 - t0
         self.meter.decode_tokens += len(rows)
         self.meter.decode_calls += 1
         if self.tracer is not None:
-            self.tracer.span(engine_track(self.name), "feed", t0, t1,
-                             {"rows": len(rows)})
+            self._bracket("feed", t0, td, t1,
+                          {"rows": len(rows), "tokens": len(rows),
+                           "kv_bytes": self._kv_token_bytes
+                           * len(rows) * (1 + cap_eff)})
         lg = np.asarray(logits, np.float32)
         for r in rows:
             self.pos[r] += 1

@@ -1,0 +1,382 @@
+"""Rolling speculation-quality monitors for the continuous scheduler.
+
+The tracer and metrics registry (serving/telemetry.py) record what
+happened; this module watches what is happening.  A :class:`Monitors`
+suite attached to the scheduler consumes the signals already flowing
+through a tick — spec-round proposed/accepted counts, step-level
+accept/reject verdicts, fallback regenerations, finish-time TTFT/TPOT,
+quarantines — into fixed-size rolling windows and evaluates them once
+per tick:
+
+    token_accept   draft tokens accepted / proposed over the last
+                   ``window`` spec-decode rounds (acceptance-rate
+                   collapse = the drafter has stopped earning its keep)
+    step_accept    accepted / (accepted + rejected) over the last
+                   ``window`` step verdicts, with fallback regenerations
+                   tracked alongside (the SpecReason funnel, online)
+    slo_burn       fraction of the last ``window`` finished requests
+                   that missed their TTFT/TPOT SLO (error-budget burn)
+    quarantine     mean quarantines per tick over the last ``window``
+                   ticks (NaN logits / engine faults)
+
+Each monitor carries an hysteresis alarm: it FIRES only after
+``patience`` consecutive bad evaluations and CLEARS only after
+``clear_patience`` consecutive good ones, and never judges at all below
+``min_samples`` observations — a single unlucky round cannot flap the
+ladder.  Alarm transitions are emitted as structured ``SchedEvent``
+alerts (kind ``"alert"``) through the scheduler's ``_emit`` funnel, so
+they land on ``on_event`` consumers AND the tracer's scheduler track.
+
+**Monitor -> ladder coupling:** :meth:`Monitors.pressure` returns 1.0
+while any alarm is firing (0.0 otherwise) and the scheduler passes it to
+``OverloadController.observe_tick(extra_pressure=...)`` every tick.
+Sustained speculation-quality collapse therefore walks the existing
+L0..L4 degradation ladder exactly as occupancy/SLO pressure does —
+shrink gamma, then turn token-level spec off — which is the correct
+remedy: a drafter whose proposals are being rejected is pure overhead.
+Every rung is greedy-output-preserving (resilience.py), and with the
+ladder disabled (the default ResilienceConfig) the monitors are pure
+observation: monitors-on serving is token-identical to monitors-off
+(tested in tests/test_monitors.py).
+
+The observation paths follow the telemetry contract: no host syncs, no
+device dispatches, no PRNG use — a deque append and integer arithmetic
+per event, evaluated once per tick."""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from .telemetry import SchedEvent
+
+
+@dataclasses.dataclass
+class MonitorConfig:
+    """Window sizes, floors/ceilings and alarm hysteresis.  The defaults
+    are deliberately loose — monitors should fire on collapse, not on
+    workload texture."""
+    window: int = 64           # samples retained per rolling window
+    min_samples: int = 8       # below this a monitor does not judge
+    patience: int = 3          # consecutive bad evaluations to fire
+    clear_patience: int = 3    # consecutive good evaluations to clear
+    # floors / ceilings per monitor
+    min_token_accept: float = 0.3    # token-level acceptance-rate floor
+    min_step_accept: float = 0.25    # step-level acceptance-rate floor
+    max_burn_rate: float = 0.5       # SLO-violating finish fraction cap
+    max_quarantine_per_tick: float = 0.25
+    # SLOs the burn monitor checks finishes against (None = not checked;
+    # with both None the burn monitor never judges)
+    slo_ttft_s: Optional[float] = None
+    slo_tpot_s: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.window < 1:
+            raise ValueError("monitor window must be >= 1")
+        if self.min_samples < 1:
+            raise ValueError("min_samples must be >= 1")
+        if self.patience < 1 or self.clear_patience < 1:
+            raise ValueError("patience/clear_patience must be >= 1")
+
+
+class RollingWindow:
+    """Fixed-capacity sample window: ``push`` evicts the oldest sample
+    beyond ``capacity`` (a ``deque(maxlen=...)``), aggregates are over
+    the retained samples only.  ``mean()`` is ``None`` on an empty
+    window — callers must treat "no data" as "no judgement", never as
+    zero."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("window capacity must be >= 1")
+        self._buf: deque = deque(maxlen=int(capacity))
+
+    def push(self, v: float) -> None:
+        self._buf.append(float(v))
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def count(self) -> int:
+        return len(self._buf)
+
+    @property
+    def sum(self) -> float:
+        return sum(self._buf)
+
+    def mean(self) -> Optional[float]:
+        if not self._buf:
+            return None
+        return sum(self._buf) / len(self._buf)
+
+    def values(self) -> List[float]:
+        return list(self._buf)
+
+
+class Alarm:
+    """Hysteresis latch: ``update(bad)`` counts consecutive bad/good
+    judgements and transitions only after ``patience`` /
+    ``clear_patience`` of them in a row; ``update(None)`` (insufficient
+    data) resets both streaks and holds the current state.  Returns
+    ``"fire"`` / ``"clear"`` on a transition, else ``None``."""
+
+    def __init__(self, patience: int, clear_patience: int):
+        self.patience = patience
+        self.clear_patience = clear_patience
+        self.firing = False
+        self._bad = 0
+        self._good = 0
+
+    def update(self, bad: Optional[bool]) -> Optional[str]:
+        if bad is None:
+            self._bad = self._good = 0
+            return None
+        if bad:
+            self._bad += 1
+            self._good = 0
+            if not self.firing and self._bad >= self.patience:
+                self.firing = True
+                self._bad = 0
+                return "fire"
+        else:
+            self._good += 1
+            self._bad = 0
+            if self.firing and self._good >= self.clear_patience:
+                self.firing = False
+                self._good = 0
+                return "clear"
+        return None
+
+
+class _Monitor:
+    """One named rolling monitor: a window, a threshold, an alarm and
+    the comparison direction (``low`` = alert when the value drops
+    below the threshold; ``high`` = alert when it rises above)."""
+
+    def __init__(self, name: str, cfg: MonitorConfig, threshold: float,
+                 direction: str):
+        assert direction in ("low", "high")
+        self.name = name
+        self.cfg = cfg
+        self.threshold = threshold
+        self.direction = direction
+        self.alarm = Alarm(cfg.patience, cfg.clear_patience)
+        self.last_value: Optional[float] = None
+
+    # subclasses define value() and samples()
+    def value(self) -> Optional[float]:
+        raise NotImplementedError
+
+    def samples(self) -> int:
+        raise NotImplementedError
+
+    def evaluate(self) -> Optional[str]:
+        """One per-tick judgement; returns the alarm transition."""
+        v = self.value()
+        self.last_value = v
+        if v is None or self.samples() < self.cfg.min_samples:
+            return self.alarm.update(None)
+        bad = v < self.threshold if self.direction == "low" \
+            else v > self.threshold
+        return self.alarm.update(bad)
+
+    def as_dict(self) -> Dict[str, Any]:
+        v = self.value()
+        return {"value": round(v, 4) if v is not None else None,
+                "threshold": self.threshold,
+                "direction": self.direction,
+                "samples": self.samples(),
+                "firing": self.alarm.firing}
+
+
+class TokenAcceptMonitor(_Monitor):
+    """Token-level acceptance rate: accepted / proposed draft tokens
+    over the last ``window`` spec-decode rounds."""
+
+    def __init__(self, cfg: MonitorConfig):
+        super().__init__("token_accept", cfg, cfg.min_token_accept, "low")
+        self._proposed = RollingWindow(cfg.window)
+        self._accepted = RollingWindow(cfg.window)
+
+    def observe(self, proposed: int, accepted: int) -> None:
+        self._proposed.push(proposed)
+        self._accepted.push(accepted)
+
+    def value(self) -> Optional[float]:
+        p = self._proposed.sum
+        if not p:
+            return None
+        return self._accepted.sum / p
+
+    def samples(self) -> int:
+        return self._proposed.count
+
+
+class StepFunnelMonitor(_Monitor):
+    """Step-level accept/reject funnel: accepted fraction of the last
+    ``window`` verdicts, with fallback regenerations counted alongside
+    (reported in ``as_dict``, not judged — every reject regenerates)."""
+
+    _ACCEPT, _REJECT, _FALLBACK = 1.0, 0.0, -1.0
+
+    def __init__(self, cfg: MonitorConfig):
+        super().__init__("step_accept", cfg, cfg.min_step_accept, "low")
+        self._verdicts = RollingWindow(cfg.window)
+        self.fallbacks = 0
+
+    def observe(self, outcome: str) -> None:
+        if outcome == "accept":
+            self._verdicts.push(self._ACCEPT)
+        elif outcome == "reject":
+            self._verdicts.push(self._REJECT)
+        elif outcome == "fallback":
+            self.fallbacks += 1
+        else:
+            raise ValueError(f"unknown step outcome {outcome!r}")
+
+    def value(self) -> Optional[float]:
+        return self._verdicts.mean()
+
+    def samples(self) -> int:
+        return self._verdicts.count
+
+    def funnel(self) -> Dict[str, int]:
+        vals = self._verdicts.values()
+        return {"accepted": sum(1 for v in vals if v == self._ACCEPT),
+                "rejected": sum(1 for v in vals if v == self._REJECT),
+                "fallbacks": self.fallbacks}
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {**super().as_dict(), **self.funnel()}
+
+
+class SloBurnMonitor(_Monitor):
+    """SLO burn rate: the fraction of the last ``window`` finished
+    requests that violated their TTFT or TPOT SLO.  With no SLO
+    configured every finish scores 0.0 and the alarm can never fire
+    (burn > max_burn_rate requires a violation)."""
+
+    def __init__(self, cfg: MonitorConfig):
+        super().__init__("slo_burn", cfg, cfg.max_burn_rate, "high")
+        self._violations = RollingWindow(cfg.window)
+
+    def observe(self, ttft_s: Optional[float],
+                tpot_s: Optional[float]) -> None:
+        c = self.cfg
+        violated = (
+            (c.slo_ttft_s is not None and ttft_s is not None
+             and ttft_s > c.slo_ttft_s)
+            or (c.slo_tpot_s is not None and tpot_s is not None
+                and tpot_s > c.slo_tpot_s))
+        self._violations.push(1.0 if violated else 0.0)
+
+    def value(self) -> Optional[float]:
+        return self._violations.mean()
+
+    def samples(self) -> int:
+        return self._violations.count
+
+
+class QuarantineMonitor(_Monitor):
+    """NaN/quarantine rate: mean quarantines per tick over the last
+    ``window`` ticks.  ``observe()`` counts a hit; ``roll_tick()`` (the
+    suite's per-tick hook) pushes the tick's count into the window."""
+
+    def __init__(self, cfg: MonitorConfig):
+        super().__init__("quarantine", cfg, cfg.max_quarantine_per_tick,
+                         "high")
+        self._per_tick = RollingWindow(cfg.window)
+        self._this_tick = 0
+
+    def observe(self) -> None:
+        self._this_tick += 1
+
+    def roll_tick(self) -> None:
+        self._per_tick.push(self._this_tick)
+        self._this_tick = 0
+
+    def value(self) -> Optional[float]:
+        return self._per_tick.mean()
+
+    def samples(self) -> int:
+        return self._per_tick.count
+
+
+class Monitors:
+    """The scheduler-facing monitor suite.  The scheduler calls the
+    ``observe_*`` hooks from the sites where the signals already exist
+    (spec on_round, verify verdicts, fallback batches, finish, fault
+    quarantine) and :meth:`on_tick` once per tick; ``on_tick`` rolls the
+    per-tick windows, evaluates every alarm and returns the structured
+    alert events for transitions.  :meth:`pressure` is the ladder
+    coupling: 1.0 while any alarm fires."""
+
+    def __init__(self, cfg: Optional[MonitorConfig] = None):
+        self.cfg = cfg if cfg is not None else MonitorConfig()
+        self.token_accept = TokenAcceptMonitor(self.cfg)
+        self.step_funnel = StepFunnelMonitor(self.cfg)
+        self.slo_burn = SloBurnMonitor(self.cfg)
+        self.quarantine = QuarantineMonitor(self.cfg)
+        self.alerts: List[SchedEvent] = []      # every transition, in order
+
+    @property
+    def all(self) -> Tuple[_Monitor, ...]:
+        return (self.token_accept, self.step_funnel, self.slo_burn,
+                self.quarantine)
+
+    # ----------------------------------------------------- observation
+    def observe_round(self, proposed: int, accepted: int) -> None:
+        self.token_accept.observe(proposed, accepted)
+
+    def observe_step(self, outcome: str) -> None:
+        self.step_funnel.observe(outcome)
+
+    def observe_finish(self, ttft_s: Optional[float],
+                       tpot_s: Optional[float]) -> None:
+        self.slo_burn.observe(ttft_s, tpot_s)
+
+    def observe_quarantine(self) -> None:
+        self.quarantine.observe()
+
+    # ------------------------------------------------------ evaluation
+    def on_tick(self, tick: int) -> List[SchedEvent]:
+        """Roll the per-tick windows and evaluate every alarm; returns
+        one ``kind="alert"`` event per transition this tick (empty
+        almost always)."""
+        self.quarantine.roll_tick()
+        events: List[SchedEvent] = []
+        for mon in self.all:
+            transition = mon.evaluate()
+            if transition is None:
+                continue
+            v = mon.last_value
+            word = "firing" if transition == "fire" else "cleared"
+            cmp_word = "below floor" if mon.direction == "low" \
+                else "above ceiling"
+            ev = SchedEvent(
+                "alert",
+                f"alert {mon.name} {word}: value "
+                f"{v:.3f} {cmp_word} {mon.threshold:g} "
+                f"(window {mon.samples()}, tick {tick})",
+                {"monitor": mon.name, "state": word,
+                 "value": round(v, 4) if v is not None else None,
+                 "threshold": mon.threshold, "tick": tick})
+            events.append(ev)
+        self.alerts.extend(events)
+        return events
+
+    def pressure(self) -> float:
+        """The overload-controller coupling: 1.0 while any alarm is
+        firing (pins ``OverloadController`` pressure so sustained
+        collapse walks the degradation ladder), 0.0 otherwise."""
+        return 1.0 if any(m.alarm.firing for m in self.all) else 0.0
+
+    def firing(self) -> List[str]:
+        return [m.name for m in self.all if m.alarm.firing]
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-able snapshot of every monitor (the /status admin
+        endpoint and the scheduler snapshot embed this)."""
+        return {m.name: m.as_dict() for m in self.all}

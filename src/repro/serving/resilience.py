@@ -178,17 +178,21 @@ class OverloadController:
         return False
 
     def observe_tick(self, tick: int, occupancy: float, rows_busy: float,
-                     queue_len: int) -> List[str]:
+                     queue_len: int, extra_pressure: float = 0.0
+                     ) -> List[str]:
         """Update pressure from this tick's signals and advance the
         ladder (hysteresis).  Returns human-readable transition events
         for the tick (empty almost always)."""
         # Pressure: the binding resource.  Pool occupancy is always a
         # pressure floor; a full row budget only counts as pressure while
-        # arrivals are actually waiting on it; an SLO miss pins pressure
-        # to 1 (the ladder exists exactly to relieve it).
+        # arrivals are actually waiting on it; an external pressure input
+        # (the speculation-quality monitors while an alarm fires) raises
+        # the floor the same way; an SLO miss pins pressure to 1 (the
+        # ladder exists exactly to relieve it).
         p = occupancy
         if queue_len > 0:
             p = max(p, rows_busy)
+        p = max(p, min(1.0, max(0.0, extra_pressure)))
         if self._slo_strained():
             p = 1.0
         self.pressure = p

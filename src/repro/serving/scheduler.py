@@ -102,10 +102,12 @@ from ..core.controller import (SpecReason, SpecReasonResult,
 from ..core.verifier import mean_body_logprob
 from ..data.tasks import Task, question_tokens
 from ..tokenizer import toy as tk
+from .admin import SchedulerSnapshot, StatusBoard
 from .batch_engine import BatchEngine, RowSnapshot
 from .faults import (AuditViolation, FaultInjector, InjectedEngineError,
                      audit_scheduler)
 from .kv_manager import KVManager
+from .monitors import Monitors
 from .paged_kv import (BlockTableSnapshot, PagedKVPool, PagedSeq,
                        PoolExhausted)
 from .prefix_cache import PrefixKVStore, RadixCache
@@ -442,7 +444,11 @@ class ContinuousScheduler:
                  faults: Optional[FaultInjector] = None,
                  audit: bool = False,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 monitors: Optional[Monitors] = None,
+                 status_board: Optional[StatusBoard] = None,
+                 on_tick: Optional[Callable[[SchedulerSnapshot],
+                                            None]] = None):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -466,6 +472,14 @@ class ContinuousScheduler:
         self.context_capacity = context_capacity
         self.tracer = tracer
         self.metrics = metrics
+        # online observability: rolling speculation-quality monitors
+        # (their pressure feeds the overload controller each tick), the
+        # admin plane's snapshot board (one immutable SchedulerSnapshot
+        # published per tick) and an optional per-tick snapshot callback
+        # (serve.py's --snapshot-every periodic artifact flush)
+        self.monitors = monitors
+        self.status_board = status_board
+        self.on_tick = on_tick
         self.base_be = BatchEngine(controller.base.model,
                                    controller.base.params, max_batch,
                                    engine_capacity,
@@ -1146,6 +1160,8 @@ class ContinuousScheduler:
         req = a.req
         self.quarantines += 1
         self.base_be.meter.req_quarantines += 1
+        if self.monitors is not None:
+            self.monitors.observe_quarantine()
         if req.retries >= self.res_cfg.max_retries:
             self._cancel(a, STATUS_FAILED, code,
                          f"{message} (retries exhausted after "
@@ -1230,8 +1246,16 @@ class ContinuousScheduler:
         busy = self.base_be.batch - min(self.base_be.free_rows,
                                         self.small_be.free_rows)
         rows_busy = min(1.0, (busy + len(self.queue)) / self.base_be.batch)
+        # speculation-quality coupling: a firing monitor alarm (evaluated
+        # at the end of the previous tick) raises the pressure floor so
+        # sustained acceptance collapse walks the same ladder occupancy
+        # does — the first rungs (shrink gamma, spec off) are exactly the
+        # remedy for a drafter that has stopped earning its keep
+        mon = self.monitors
+        mon_pressure = mon.pressure() if mon is not None else 0.0
         for ev in self.res.observe_tick(self.ticks, occ, rows_busy,
-                                        len(self.queue)):
+                                        len(self.queue),
+                                        extra_pressure=mon_pressure):
             # degradation-ladder transitions (either direction), rendered
             # verbatim — the controller already formats the line
             self._emit("degrade", ev, tick=self.ticks,
@@ -1293,6 +1317,12 @@ class ContinuousScheduler:
         self._finish()
         if self.audit_enabled:
             self._audit()
+        if mon is not None:
+            # roll the per-tick windows, evaluate every alarm; alarm
+            # transitions flow through the standard event funnel
+            # (on_event + tracer instant on the scheduler track)
+            for ev in mon.on_tick(self.ticks):
+                self._emit(ev.kind, str(ev), **ev.fields)
         if mt is not None:
             mt.ticks.inc()
             mt.queue_depth.set(len(self.queue))
@@ -1317,6 +1347,15 @@ class ContinuousScheduler:
             tr.counter("queue_depth",
                        {"queued": float(len(self.queue)),
                         "active": float(len(self.active))}, t=t_tick1)
+        if self.status_board is not None or self.on_tick is not None:
+            # admin plane: publish one immutable snapshot per tick (the
+            # lock is held only for the reference swap) and fire the
+            # periodic-flush callback with the same snapshot
+            snap = self.snapshot()
+            if self.status_board is not None:
+                self.status_board.publish(snap)
+            if self.on_tick is not None:
+                self.on_tick(snap)
         working = bool(self.active or self.queue)
         if not working and self.faults is not None:
             # end of run: drop any pool holds whose expiry tick the
@@ -1369,6 +1408,9 @@ class ContinuousScheduler:
                 if a.req.admitted_at is not None else a.req.e2e_latency
             self.res.observe_finish(a.req.ttft, a.req.tpot(n_out),
                                     service)
+            if self.monitors is not None:
+                self.monitors.observe_finish(a.req.ttft,
+                                             a.req.tpot(n_out))
             if self.tracer is not None:
                 self.tracer.instant(request_track(a.req.request_id),
                                     "done",
@@ -1473,6 +1515,8 @@ class ContinuousScheduler:
                 # delimiter owed to the base context; flushed in this
                 # tick's merged close/delim extend
                 a.pending_base.append(delim)
+                if self.monitors is not None:
+                    self.monitors.observe_step("accept")
                 if self.tracer is not None:
                     self.tracer.instant(
                         request_track(a.req.request_id), "accept",
@@ -1490,6 +1534,8 @@ class ContinuousScheduler:
         a.small_seq.restore(a.s_seq_snap)
         a.b_seq_snap = a.s_seq_snap = None
         self.controller.note_reject(a.state, a.body, utility)
+        if self.monitors is not None:
+            self.monitors.observe_step("reject")
         if self.tracer is not None:
             self.tracer.instant(request_track(a.req.request_id), "reject",
                                 {"utility": round(utility, 4),
@@ -1518,7 +1564,7 @@ class ContinuousScheduler:
         acts = fall + ans
         if not acts:
             return
-        tr, mt = self.tracer, self.metrics
+        tr, mt, mon = self.tracer, self.metrics, self.monitors
         t_dec0 = time.perf_counter() if tr is not None else 0.0
         keys = self._split_keys(acts)
         budgets = [ctrl.max_step_tokens(a.state) for a in fall] \
@@ -1540,10 +1586,11 @@ class ContinuousScheduler:
                              budgets[i], stops[i], keys[i])
                      for i in spec_idx]
             on_round = None
-            if tr is not None or mt is not None:
+            if tr is not None or mt is not None or mon is not None:
                 # per-round telemetry: one span per judged row on its
                 # request track (proposed/accepted draft tokens), one
-                # accepted-length observation per row per round
+                # accepted-length observation per row per round, one
+                # acceptance-rate sample per row per round
                 def on_round(rnd, rt0, rt1, infos, _sub=sub):
                     for j, proposed, accepted in infos:
                         a = _sub[j]
@@ -1555,6 +1602,8 @@ class ContinuousScheduler:
                         if mt is not None:
                             mt.accepted_length.observe(accepted)
                             mt.spec_rounds.inc()
+                        if mon is not None:
+                            mon.observe_round(proposed, accepted)
             s_outs, round_stats = self.spec_be.decode_rows(
                 items, cfg.sampling, _SchedulerLedger(self, sub),
                 gamma=tc.gamma, on_round=on_round)
@@ -1585,6 +1634,8 @@ class ContinuousScheduler:
         for i, a in enumerate(fall):
             if a.alive and outs[i] is not None:
                 ctrl.note_base_step(a.state, outs[i])
+                if mon is not None:
+                    mon.observe_step("fallback")
         for i, a in enumerate(ans):
             ids = outs[len(fall) + i]
             if a.alive and ids is not None:
@@ -1633,6 +1684,45 @@ class ContinuousScheduler:
             a.pending_base = []
 
     # ------------------------------------------------------------- stats
+    def snapshot(self) -> SchedulerSnapshot:
+        """One immutable copy of this tick's observable state for the
+        admin plane (/status).  Built on the scheduler thread from plain
+        scalars/strings — the admin thread never walks live scheduler
+        objects (the snapshot locking contract, DESIGN.md
+        §Observability)."""
+        active = [{
+            "request": a.req.request_id,
+            "phase": a.state.phase,
+            "cursor": a.cursor,
+            "prompt_tokens": len(a.prompt),
+            "status": a.req.status,
+            "priority": a.req.priority,
+            "steps": len(a.state.steps),
+        } for a in self.active if a.alive]
+        return SchedulerSnapshot(
+            tick=self.ticks,
+            time_s=time.perf_counter(),
+            queue_depth=len(self.queue),
+            active=active,
+            pools={w: round(p.num_used / p.num_blocks, 4)
+                   for w, p in self.pools.items()},
+            pressure=round(self.res.pressure, 4),
+            level=self.res.level,
+            counts={
+                "timeouts": self.timeouts,
+                "shed": self.shed_requests,
+                "quarantines": self.quarantines,
+                "retries": self.retries,
+                "failed": self.failures,
+                "preemptions": self.preemptions,
+                "stalled_ticks": self.stalled_ticks,
+                "audit_violations": self.audit_violations,
+                "done": len(self.done),
+                "submitted": self._submitted,
+            },
+            monitors=self.monitors.as_dict()
+            if self.monitors is not None else None)
+
     def resilience_stats(self) -> Dict[str, object]:
         """The run's failure-lifecycle and overload-control counters
         (the serve CLI's ``[resilience]`` line)."""

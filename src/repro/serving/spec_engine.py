@@ -54,6 +54,7 @@ from ..core.spec_decode import (SpecDecodeStats, acceptance_step,
                                 build_stop_arrays)
 from ..sampling.sample import SamplingParams
 from .batch_engine import BatchEngine
+from .telemetry import engine_track
 
 
 @dataclasses.dataclass
@@ -246,17 +247,33 @@ class BatchSpecEngine:
                     key_mat[i] = keys[i]
                     greedy[i] = items[i].greedy
                     stop_mask[i] = stop_mask_items[i]
+                tr = self.base_be.tracer
+                t_a0 = time.perf_counter() if tr is not None else 0.0
                 suffix, m, n_acc, hit_stop, new_keys = acceptance_step(
                     jnp.asarray(toks), jnp.asarray(qprobs),
                     jnp.asarray(logits), jnp.asarray(bonus),
                     jnp.asarray(g_arr), jnp.asarray(key_mat),
                     jnp.asarray(stop_arr), jnp.asarray(stop_mask),
                     jnp.asarray(greedy), params)
-                suffix = np.asarray(suffix)
-                m = np.asarray(m)
-                n_acc = np.asarray(n_acc)
+                t_ad = time.perf_counter() if tr is not None else 0.0
+                suffix = np.asarray(suffix)       # the host sync: the
+                m = np.asarray(m)                 # reconcile below needs
+                n_acc = np.asarray(n_acc)         # the verdicts on host
                 hit_stop = np.asarray(hit_stop)
                 new_keys = np.asarray(new_keys)
+                if tr is not None:
+                    # host/device bracket for the fused acceptance
+                    # program (same sub-span semantics as the
+                    # BatchEngine brackets: .dispatch = staging + jitted
+                    # call, .block_until_ready = the np.asarray wait)
+                    t_a1 = time.perf_counter()
+                    track = engine_track(self.base_be.name)
+                    args = {"rows": len(judge), "gamma": gam}
+                    tr.span(track, "accept_prog", t_a0, t_a1, args)
+                    tr.span(track, "accept_prog.dispatch", t_a0, t_ad,
+                            {"side": "host"})
+                    tr.span(track, "accept_prog.block_until_ready",
+                            t_ad, t_a1, {"side": "device"})
 
                 # -- 4) reconcile: O(1) truncate + block-table truncation.
                 # The base cache holds [pending] + chunk at the speculated

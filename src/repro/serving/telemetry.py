@@ -53,10 +53,26 @@ from __future__ import annotations
 
 import bisect
 import json
+import os
 import time
 from collections import deque
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple)
+
+
+def atomic_write(path: str, text: str) -> None:
+    """Crash-safe text write: the content lands in ``<path>.tmp`` first
+    and is moved into place with ``os.replace`` (atomic on POSIX), so a
+    reader never sees a truncated artifact and an interrupt mid-write
+    leaves any previous version intact.  Used for every telemetry
+    artifact (--trace, --metrics-out, --snapshot-every flushes)."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
 
 # ---------------------------------------------------------------------------
 # Structured scheduler events
@@ -176,12 +192,15 @@ class Tracer:
         return list(self._buf)
 
     # ------------------------------------------------------------- export
-    def chrome_trace(self) -> Dict[str, Any]:
+    def chrome_trace(self, last: Optional[int] = None) -> Dict[str, Any]:
         """Render the ring as a Chrome trace-event JSON object: one
         process, one thread (tid) per track in first-seen order, complete
         ``X`` events with microsecond ts/dur, ``i`` instants, ``C``
         counters, and ``M`` metadata naming the tracks.  Events are
-        sorted by timestamp."""
+        sorted by timestamp.  ``last=N`` renders only the N most recent
+        ring entries (the admin plane's /trace?last=N slice); the
+        one-shot ``list(deque)`` copy makes the render safe against a
+        concurrently appending scheduler thread."""
         tids: Dict[str, int] = {}
 
         def tid_of(track: str) -> int:
@@ -190,8 +209,11 @@ class Tracer:
                 t = tids[track] = len(tids)
             return t
 
+        entries = list(self._buf)
+        if last is not None:
+            entries = entries[-last:] if last > 0 else []
         events: List[Dict[str, Any]] = []
-        for ph, track, name, ts, dur, args in self._buf:
+        for ph, track, name, ts, dur, args in entries:
             ts_us = round(ts * 1e6, 3)
             if ph == "X":
                 e: Dict[str, Any] = {
@@ -229,10 +251,12 @@ class Tracer:
         }
 
     def export(self, path: str) -> None:
-        """Write the Chrome trace-event JSON to ``path`` (open it in
-        https://ui.perfetto.dev or chrome://tracing)."""
-        with open(path, "w") as f:
-            json.dump(self.chrome_trace(), f)
+        """Write the Chrome trace-event JSON to ``path`` atomically
+        (open it in https://ui.perfetto.dev or chrome://tracing).  A
+        crash mid-write leaves the previous file intact, never a
+        truncated one — the crash-safe-flush contract serve.py's
+        try/finally and --snapshot-every rely on."""
+        atomic_write(path, json.dumps(self.chrome_trace()))
 
 
 # ---------------------------------------------------------------------------

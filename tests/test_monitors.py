@@ -1,0 +1,329 @@
+"""Rolling speculation-quality monitors: window math (empty / single
+sample / eviction), alarm hysteresis (patience, clear_patience, the
+insufficient-data reset), per-monitor value semantics, the
+monitor -> degradation-ladder pressure coupling, and the token-identity
+guarantee that monitors-on serving matches monitors-off in greedy,
+sampled and spec-decode modes."""
+
+import random
+
+import jax
+import pytest
+
+from repro.core.controller import SpecReason, SpecReasonConfig
+from repro.core.policies import StaticThreshold
+from repro.data import tasks
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.sampling.sample import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.kv_manager import KVBudget, KVManager
+from repro.serving.monitors import (Alarm, MonitorConfig, Monitors,
+                                    RollingWindow)
+from repro.serving.resilience import (OverloadController, ResilienceConfig,
+                                      TickConfig)
+from repro.serving.scheduler import ContinuousScheduler
+from repro.tokenizer import toy as tk
+
+BASE_CFG = ModelConfig(name="tb", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=tk.VOCAB_SIZE).validate()
+SMALL_CFG = ModelConfig(name="ts", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    return (Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256),
+            Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256))
+
+
+def _mk_controller(engine_pair, temperature=0.0, spec=False, gamma=3,
+                   token_budget=48, max_steps=6):
+    base, small = engine_pair
+    cfg = SpecReasonConfig(policy=StaticThreshold(5.0),
+                           token_budget=token_budget, max_steps=max_steps,
+                           use_spec_decode=spec, spec_gamma=gamma,
+                           sampling=SamplingParams(temperature=temperature))
+    return SpecReason(base, small, cfg)
+
+
+def _mk_sched(ctrl, *, monitors=None, resilience=None):
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    return ContinuousScheduler(ctrl, kv, max_batch=4,
+                               context_capacity=128,
+                               chunked_prefill=True,
+                               max_prefill_tokens=16,
+                               resilience=resilience,
+                               monitors=monitors)
+
+
+def _workload(n_requests=3, seed=0):
+    rng = random.Random(seed)
+    reqs = [tasks.sample_task(rng, min_steps=8, max_steps=10)
+            for _ in range(n_requests)]
+    keys = [jax.random.PRNGKey(100 * seed + i) for i in range(n_requests)]
+    return reqs, keys
+
+
+def _drain(cs, reqs, keys):
+    handles = [cs.submit(t, key=k) for t, k in zip(reqs, keys)]
+    cs.drain(jax.random.PRNGKey(9))
+    return handles
+
+
+# ------------------------------------------------------- window math
+
+
+def test_rolling_window_empty():
+    w = RollingWindow(4)
+    assert len(w) == 0 and w.count == 0 and w.sum == 0.0
+    assert w.mean() is None          # no data != zero
+    assert w.values() == []
+
+
+def test_rolling_window_single_sample():
+    w = RollingWindow(4)
+    w.push(3.0)
+    assert w.count == 1 and w.sum == 3.0 and w.mean() == 3.0
+
+
+def test_rolling_window_eviction():
+    w = RollingWindow(3)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        w.push(v)
+    # capacity 3: the 1.0 was evicted, aggregates see only the tail
+    assert w.values() == [2.0, 3.0, 4.0]
+    assert w.count == 3 and w.sum == 9.0 and w.mean() == 3.0
+
+
+def test_rolling_window_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        RollingWindow(0)
+
+
+# -------------------------------------------------- alarm hysteresis
+
+
+def test_alarm_fires_only_after_patience():
+    a = Alarm(patience=3, clear_patience=2)
+    assert a.update(True) is None
+    assert a.update(True) is None
+    assert a.update(True) == "fire"       # third consecutive bad
+    assert a.firing
+    assert a.update(True) is None         # already firing: no re-fire
+
+
+def test_alarm_good_sample_resets_bad_streak():
+    a = Alarm(patience=2, clear_patience=2)
+    assert a.update(True) is None
+    assert a.update(False) is None        # streak broken
+    assert a.update(True) is None         # streak restarts at 1
+    assert a.update(True) == "fire"
+
+
+def test_alarm_clears_only_after_clear_patience():
+    a = Alarm(patience=1, clear_patience=3)
+    assert a.update(True) == "fire"
+    assert a.update(False) is None
+    assert a.update(False) is None
+    assert a.update(False) == "clear"
+    assert not a.firing
+
+
+def test_alarm_none_resets_streaks_and_holds_state():
+    a = Alarm(patience=2, clear_patience=2)
+    a.update(True)
+    a.update(None)                        # window went empty mid-streak
+    assert a.update(True) is None         # bad streak restarted
+    assert a.update(True) == "fire"
+    a.update(False)
+    a.update(None)                        # insufficient data while firing
+    assert a.firing                       # state held, not cleared
+    assert a.update(False) is None        # good streak restarted
+    assert a.update(False) == "clear"
+
+
+# ----------------------------------------------- per-monitor values
+
+
+def test_token_accept_monitor_ratio_and_no_data():
+    m = Monitors(MonitorConfig(window=4, min_samples=1))
+    assert m.token_accept.value() is None         # nothing observed
+    m.observe_round(proposed=4, accepted=1)
+    m.observe_round(proposed=4, accepted=3)
+    assert m.token_accept.value() == pytest.approx(0.5)
+    # eviction: push two more rounds, window keeps the last 4
+    m.observe_round(proposed=2, accepted=0)
+    m.observe_round(proposed=2, accepted=0)
+    m.observe_round(proposed=2, accepted=0)
+    assert m.token_accept.value() == pytest.approx(3 / 10)
+    # all-zero proposals -> undefined ratio, not a division crash
+    z = Monitors(MonitorConfig(window=4, min_samples=1))
+    z.observe_round(proposed=0, accepted=0)
+    assert z.token_accept.value() is None
+
+
+def test_step_funnel_counts_and_fallbacks():
+    m = Monitors(MonitorConfig(window=8, min_samples=1))
+    for outcome in ("accept", "accept", "reject", "fallback"):
+        m.observe_step(outcome)
+    assert m.step_funnel.value() == pytest.approx(2 / 3)
+    f = m.step_funnel.funnel()
+    assert f == {"accepted": 2, "rejected": 1, "fallbacks": 1}
+    with pytest.raises(ValueError):
+        m.observe_step("banana")
+
+
+def test_slo_burn_requires_configured_slo():
+    no_slo = Monitors(MonitorConfig(window=4, min_samples=1, patience=1))
+    for _ in range(4):
+        no_slo.observe_finish(ttft_s=99.0, tpot_s=99.0)
+    no_slo.on_tick(1)
+    assert no_slo.slo_burn.value() == 0.0          # nothing to violate
+    assert not no_slo.slo_burn.alarm.firing
+
+    slo = Monitors(MonitorConfig(window=4, min_samples=1, patience=1,
+                                 slo_tpot_s=0.5, max_burn_rate=0.5))
+    slo.observe_finish(ttft_s=None, tpot_s=1.0)    # violation
+    slo.observe_finish(ttft_s=None, tpot_s=1.0)    # violation
+    slo.observe_finish(ttft_s=None, tpot_s=0.1)    # ok
+    assert slo.slo_burn.value() == pytest.approx(2 / 3)
+    assert slo.on_tick(1)                          # burn > cap: fires
+    assert slo.slo_burn.alarm.firing
+
+
+def test_quarantine_rate_rolls_per_tick():
+    m = Monitors(MonitorConfig(window=4, min_samples=1))
+    m.observe_quarantine()
+    m.observe_quarantine()
+    m.on_tick(1)                                   # tick with 2 hits
+    m.on_tick(2)                                   # quiet tick
+    assert m.quarantine.value() == pytest.approx(1.0)
+    assert m.quarantine.samples() == 2
+
+
+# ------------------------------------------ alerts + ladder coupling
+
+
+def test_alert_events_are_structured_and_hysteretic():
+    cfg = MonitorConfig(window=8, min_samples=2, patience=2,
+                        clear_patience=2, min_token_accept=0.5)
+    m = Monitors(cfg)
+    m.observe_round(8, 0)
+    m.observe_round(8, 0)
+    assert m.on_tick(1) == []                      # bad #1: patience
+    assert m.pressure() == 0.0
+    evs = m.on_tick(2)                             # bad #2: fires
+    assert len(evs) == 1
+    ev = evs[0]
+    assert ev.kind == "alert"
+    assert ev.fields["monitor"] == "token_accept"
+    assert ev.fields["state"] == "firing"
+    assert ev.fields["tick"] == 2
+    assert "below floor" in str(ev)
+    assert m.pressure() == 1.0
+    assert m.firing() == ["token_accept"]
+    # recovery: acceptance back above the floor clears after patience
+    for _ in range(8):
+        m.observe_round(8, 8)
+    assert m.on_tick(3) == []
+    evs = m.on_tick(4)
+    assert len(evs) == 1 and evs[0].fields["state"] == "cleared"
+    assert m.pressure() == 0.0
+    assert [e.fields["state"] for e in m.alerts] == ["firing", "cleared"]
+
+
+def test_monitors_as_dict_is_json_shape():
+    m = Monitors(MonitorConfig(window=4, min_samples=1))
+    m.observe_round(4, 2)
+    d = m.as_dict()
+    assert set(d) == {"token_accept", "step_accept", "slo_burn",
+                      "quarantine"}
+    assert d["token_accept"]["value"] == 0.5
+    assert d["token_accept"]["direction"] == "low"
+    assert d["step_accept"]["fallbacks"] == 0
+    assert all("firing" in v for v in d.values())
+
+
+def test_extra_pressure_walks_overload_ladder():
+    """Sustained monitor pressure steps the ladder down exactly as
+    occupancy pressure does — and releases it when the alarm clears."""
+    ctrl = OverloadController(
+        ResilienceConfig(degrade=True, patience=2, cooldown=2),
+        TickConfig(gamma=4, spec_decode=True, max_prefill_tokens=64,
+                   cache_insert=True))
+    for t in range(4):
+        ctrl.observe_tick(t, occupancy=0.1, rows_busy=0.0, queue_len=0,
+                          extra_pressure=1.0)
+    assert ctrl.pressure == 1.0
+    assert ctrl.level == 2                      # two steps in four ticks
+    assert ctrl.tick_config().gamma == 2        # L1: gamma halved
+    assert not ctrl.tick_config().spec_decode   # L2: spec off
+    for t in range(4, 8):
+        ctrl.observe_tick(t, occupancy=0.1, rows_busy=0.0, queue_len=0,
+                          extra_pressure=0.0)
+    assert ctrl.level == 0                      # cooled back to full
+
+
+def test_scheduler_monitor_pressure_reaches_ladder(engine_pair):
+    """End to end through the scheduler: a firing monitor pins pressure
+    and, with the ladder enabled, walks the degradation level."""
+    reqs, keys = _workload(n_requests=3, seed=3)
+    mon = Monitors(MonitorConfig(window=4, min_samples=1, patience=1))
+    mon.token_accept.alarm.firing = True        # force a live alarm
+    ctrl = _mk_controller(engine_pair, spec=True)
+    cs = _mk_sched(ctrl, monitors=mon,
+                   resilience=ResilienceConfig(degrade=True, patience=1,
+                                               cooldown=10**6))
+    handles = _drain(cs, reqs, keys)
+    assert all(h.result is not None for h in handles)
+    assert cs.res.pressure == 1.0
+    assert cs.res.level > 0
+    assert cs.res.transitions
+
+
+def test_snapshot_carries_monitors_and_ladder_state(engine_pair):
+    reqs, keys = _workload(n_requests=2, seed=4)
+    mon = Monitors(MonitorConfig(window=8, min_samples=1))
+    cs = _mk_sched(_mk_controller(engine_pair, spec=True), monitors=mon)
+    _drain(cs, reqs, keys)
+    snap = cs.snapshot()
+    assert snap.tick == cs.ticks
+    assert snap.queue_depth == 0 and snap.active == []
+    assert snap.level == 0 and 0.0 <= snap.pressure <= 1.0
+    assert set(snap.pools)                      # pool occupancy present
+    assert snap.monitors is not None
+    assert "token_accept" in snap.monitors
+    assert snap.counts["done"] == 2
+
+
+# ------------------------------------------------------ identity
+
+
+@pytest.mark.parametrize("mode", ["greedy", "sampled", "spec"])
+def test_monitors_do_not_change_tokens(engine_pair, mode):
+    """Monitors-on serving is token-identical to monitors-off: the
+    observation hooks never touch device state, PRNG or scheduling
+    decisions (the default ladder is inert)."""
+    temperature = 0.8 if mode == "sampled" else 0.0
+    spec = mode == "spec"
+    reqs, keys = _workload(n_requests=3, seed=11)
+
+    plain = _drain(_mk_sched(_mk_controller(
+        engine_pair, temperature=temperature, spec=spec)), reqs, keys)
+    mon = Monitors(MonitorConfig(window=8, min_samples=1, patience=1))
+    monitored = _drain(_mk_sched(_mk_controller(
+        engine_pair, temperature=temperature, spec=spec),
+        monitors=mon), reqs, keys)
+
+    for h_on, h_off in zip(monitored, plain):
+        assert h_on.result is not None and h_off.result is not None
+        assert h_on.result.thinking_ids == h_off.result.thinking_ids
+        assert h_on.result.answer_ids == h_off.result.answer_ids
+    if spec:
+        # the monitored run actually observed the spec traffic
+        assert mon.token_accept.samples() > 0
+        assert mon.step_funnel.samples() > 0

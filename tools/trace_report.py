@@ -1,9 +1,10 @@
 """Trace analyzer: turn a ``--trace out.json`` Chrome trace-event file
-from the serving driver into human-readable tables.
+from the serving driver into human-readable tables or one JSON doc.
 
   python tools/trace_report.py out.json
+  python tools/trace_report.py out.json --json > report.json
 
-Three views, all from the one artifact:
+Four views, all from the one artifact:
 
 * **Waterfall** — per request, the phase timeline in submission order:
   queued / prefill chunks / speculate / verify / fallback / close /
@@ -12,12 +13,24 @@ Three views, all from the one artifact:
 * **Phase attribution** — per track (scheduler, each engine, requests
   pooled), total span time per phase name and its share of the trace's
   wall window.  Engine rows attribute device-dispatch brackets
-  (prefill / decode / extend / feed / cache_seed); request rows
-  attribute scheduler phases.
+  (prefill / decode / extend / feed / cache_seed / accept_prog);
+  request rows attribute scheduler phases.  The ``.dispatch`` /
+  ``.block_until_ready`` sub-spans are EXCLUDED here — they tile their
+  parent bracket, so summing them alongside it would double-count.
+* **Host/device attribution** — per engine call op, calls and total
+  time split into host ms (the ``.dispatch`` sub-spans: argument
+  staging + the jitted call, which returns once the device work is
+  enqueued) and device ms (the ``.block_until_ready`` sub-spans: the
+  wait for device completion), plus the static cost annotations summed
+  off the parent spans (tokens, est. KV MB moved).
 * **Speculation funnel** — proposed vs accepted draft tokens summed
   over every spec_round span, step-level accept/reject instants, and
   fallback regenerations: the proposed → accepted → fallback shape of
   the run.
+
+``--json`` emits all four as one machine-readable document
+(``{meta, waterfall, attribution, hostdev, funnel}``) so CI and
+scripts gate on trace contents instead of scraping stdout.
 
 The loader *validates* before it renders — required keys per event
 type, non-negative complete-event durations, in-window timestamps, a
@@ -38,6 +51,14 @@ from collections import defaultdict
 # event names that appear on request tracks and mark scheduler phases
 REQUEST_PHASES = ("queued", "prefill", "speculate", "verify", "fallback",
                   "close", "answer", "spec_round")
+
+# host/device sub-span suffixes (batch_engine._bracket / the spec
+# engine's accept_prog bracket)
+_SUB_SUFFIXES = (".dispatch", ".block_until_ready")
+
+
+def _is_subspan(name: str) -> bool:
+    return name.endswith(_SUB_SUFFIXES)
 
 
 class TraceError(Exception):
@@ -113,39 +134,59 @@ def _fmt_ms(us: float) -> str:
     return f"{us / 1e3:.1f}ms"
 
 
-def waterfall(events: list, tracks: dict) -> str:
-    lines = ["== per-request waterfall =="]
+# ------------------------------------------------------------ waterfall
+def waterfall_data(events: list, tracks: dict) -> list:
     by_req = defaultdict(list)
     for ev in events:
         track = tracks.get(ev.get("tid"))
         if (ev.get("ph") == "X" and track and track.startswith("req:")
                 and ev["name"] != "spec_round"):
             by_req[track].append(ev)
-    if not by_req:
-        return "\n".join(lines + ["(no request spans)"])
+    out = []
     # submission order = start of each request's queued span
-    order = sorted(by_req, key=lambda r: min(e["ts"] for e in by_req[r]))
-    for track in order:
+    for track in sorted(by_req,
+                        key=lambda r: min(e["ts"] for e in by_req[r])):
         evs = sorted(by_req[track], key=lambda e: (e["ts"], e["dur"]))
         t0 = evs[0]["ts"]
-        total = max(e["ts"] + e["dur"] for e in evs) - t0
-        lines.append(f"{track}  ({_fmt_ms(total)} total)")
-        for e in evs:
-            args = e.get("args") or {}
+        out.append({
+            "request": track[len("req:"):],
+            "total_ms": round((max(e["ts"] + e["dur"] for e in evs) - t0)
+                              / 1e3, 3),
+            "spans": [{"name": e["name"],
+                       "offset_ms": round((e["ts"] - t0) / 1e3, 3),
+                       "dur_ms": round(e["dur"] / 1e3, 3),
+                       "args": e.get("args") or {}} for e in evs],
+        })
+    return out
+
+
+def waterfall_text(data: list) -> str:
+    lines = ["== per-request waterfall =="]
+    if not data:
+        return "\n".join(lines + ["(no request spans)"])
+    for req in data:
+        lines.append(f"req:{req['request']}  ({req['total_ms']:.1f}ms "
+                     f"total)")
+        for s in req["spans"]:
+            args = s["args"]
             extra = ""
-            if e["name"] == "prefill" and "to" in args:
+            if s["name"] == "prefill" and "to" in args:
                 extra = f"  [{args.get('from', '?')}..{args['to']}" \
                         f"/{args.get('prompt', '?')}]"
-            lines.append(f"  +{_fmt_ms(e['ts'] - t0):>10}  "
-                         f"{e['name']:<10} {_fmt_ms(e['dur']):>10}{extra}")
+            lines.append(f"  +{s['offset_ms']:>9.1f}ms  "
+                         f"{s['name']:<10} {s['dur_ms']:>9.1f}ms{extra}")
     return "\n".join(lines)
 
 
-def attribution(events: list, tracks: dict) -> str:
-    lines = ["== phase attribution =="]
-    xs = [e for e in events if e.get("ph") == "X"]
+# ---------------------------------------------------------- attribution
+def attribution_data(events: list, tracks: dict) -> dict:
+    # host/device sub-spans tile their parent bracket — summing them
+    # alongside it would double-count every engine call, so they are
+    # excluded here (the hostdev view is built from them instead)
+    xs = [e for e in events
+          if e.get("ph") == "X" and not _is_subspan(e["name"])]
     if not xs:
-        return "\n".join(lines + ["(no spans)"])
+        return {"wall_ms": 0.0, "tracks": {}}
     wall = (max(e["ts"] + e["dur"] for e in xs)
             - min(e["ts"] for e in xs)) or 1.0
     # requests pool into one row-group; engines and scheduler stay apart
@@ -154,17 +195,95 @@ def attribution(events: list, tracks: dict) -> str:
         track = tracks.get(e["tid"], "?")
         group = "requests" if track.startswith("req:") else track
         groups[group][e["name"]] += e["dur"]
+    return {
+        "wall_ms": round(wall / 1e3, 3),
+        "tracks": {
+            group: [{"phase": name, "ms": round(dur / 1e3, 3),
+                     "share": round(dur / wall, 4)}
+                    for name, dur in sorted(groups[group].items(),
+                                            key=lambda kv: -kv[1])]
+            for group in sorted(groups)
+        },
+    }
+
+
+def attribution_text(data: dict) -> str:
+    lines = ["== phase attribution =="]
+    if not data["tracks"]:
+        return "\n".join(lines + ["(no spans)"])
     lines.append(f"{'track':<28} {'phase':<12} {'time':>10} {'share':>7}")
-    for group in sorted(groups):
-        for name, dur in sorted(groups[group].items(),
-                                key=lambda kv: -kv[1]):
-            lines.append(f"{group:<28} {name:<12} {_fmt_ms(dur):>10} "
-                         f"{dur / wall:>6.1%}")
+    for group, rows in data["tracks"].items():
+        for r in rows:
+            lines.append(f"{group:<28} {r['phase']:<12} "
+                         f"{r['ms']:>8.1f}ms {r['share']:>6.1%}")
     return "\n".join(lines)
 
 
-def funnel(events: list, tracks: dict) -> str:
-    lines = ["== speculation funnel =="]
+# -------------------------------------------------- host/device view
+def hostdev_data(events: list, tracks: dict) -> dict:
+    """Host-vs-device time per engine call op, from the bracket
+    sub-spans: host = ``.dispatch`` (staging + enqueue), device =
+    ``.block_until_ready`` (the completion wait).  Calls / tokens /
+    KV bytes are summed off the parent spans' static annotations."""
+    per = defaultdict(lambda: {"calls": 0, "host_us": 0.0,
+                               "device_us": 0.0, "tokens": 0,
+                               "kv_bytes": 0})
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        track = tracks.get(e["tid"], "?")
+        if not track.startswith("engine:"):
+            continue
+        engine = track[len("engine:"):]
+        name = e["name"]
+        if name.endswith(".dispatch"):
+            per[(engine, name[:-len(".dispatch")])]["host_us"] += e["dur"]
+        elif name.endswith(".block_until_ready"):
+            per[(engine, name[:-len(".block_until_ready")])][
+                "device_us"] += e["dur"]
+        else:
+            d = per[(engine, name)]
+            d["calls"] += 1
+            args = e.get("args") or {}
+            d["tokens"] += args.get("tokens", 0)
+            d["kv_bytes"] += args.get("kv_bytes", 0)
+    engines = defaultdict(list)
+    for (engine, op), d in sorted(
+            per.items(), key=lambda kv: -(kv[1]["host_us"]
+                                          + kv[1]["device_us"])):
+        total = d["host_us"] + d["device_us"]
+        engines[engine].append({
+            "op": op,
+            "calls": d["calls"],
+            "host_ms": round(d["host_us"] / 1e3, 3),
+            "device_ms": round(d["device_us"] / 1e3, 3),
+            "device_share": round(d["device_us"] / total, 4)
+            if total else 0.0,
+            "tokens": d["tokens"],
+            "kv_mb": round(d["kv_bytes"] / (1 << 20), 3),
+        })
+    return {"engines": dict(engines)}
+
+
+def hostdev_text(data: dict) -> str:
+    lines = ["== host/device attribution =="]
+    if not data["engines"]:
+        return "\n".join(lines + ["(no engine bracket sub-spans — trace "
+                                  "predates host/device attribution)"])
+    lines.append(f"{'engine':<22} {'op':<12} {'calls':>6} {'host':>9} "
+                 f"{'device':>9} {'dev%':>6} {'tokens':>8} {'kv MB':>8}")
+    for engine, rows in data["engines"].items():
+        for r in rows:
+            lines.append(
+                f"{engine:<22} {r['op']:<12} {r['calls']:>6} "
+                f"{r['host_ms']:>7.1f}ms {r['device_ms']:>7.1f}ms "
+                f"{r['device_share']:>6.1%} {r['tokens']:>8} "
+                f"{r['kv_mb']:>8.2f}")
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------- funnel
+def funnel_data(events: list, tracks: dict) -> dict:
     proposed = accepted = rounds = 0
     step_accept = step_reject = fallbacks = 0
     for ev in events:
@@ -179,17 +298,29 @@ def funnel(events: list, tracks: dict) -> str:
             step_accept += 1
         elif ev.get("ph") == "i" and name == "reject":
             step_reject += 1
-    steps = step_accept + step_reject
+    return {
+        "steps": {"accepted": step_accept, "rejected": step_reject,
+                  "fallbacks": fallbacks},
+        "decode": {"rounds": rounds, "proposed": proposed,
+                   "accepted": accepted},
+    }
+
+
+def funnel_text(data: dict) -> str:
+    lines = ["== speculation funnel =="]
+    st, dec = data["steps"], data["decode"]
+    steps = st["accepted"] + st["rejected"]
     if steps:
-        lines.append(f"steps   : {step_accept}/{steps} accepted "
-                     f"({step_accept / steps:.0%}), "
-                     f"{fallbacks} fallback regenerations")
+        lines.append(f"steps   : {st['accepted']}/{steps} accepted "
+                     f"({st['accepted'] / steps:.0%}), "
+                     f"{st['fallbacks']} fallback regenerations")
     else:
         lines.append("steps   : none recorded")
-    if rounds:
-        lines.append(f"decode  : {accepted}/{proposed} draft tokens "
-                     f"accepted over {rounds} rounds "
-                     f"(mean {accepted / rounds:.2f}/round)")
+    if dec["rounds"]:
+        lines.append(f"decode  : {dec['accepted']}/{dec['proposed']} "
+                     f"draft tokens accepted over {dec['rounds']} rounds "
+                     f"(mean {dec['accepted'] / dec['rounds']:.2f}"
+                     f"/round)")
     else:
         lines.append("decode  : no spec_round spans (token-level spec "
                      "decode off)")
@@ -203,6 +334,10 @@ def main(argv=None) -> int:
     ap.add_argument("trace", help="path to the trace JSON")
     ap.add_argument("--validate-only", action="store_true",
                     help="run the structural checks and exit (CI mode)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit all views as one machine-readable JSON "
+                         "doc ({meta, waterfall, attribution, hostdev, "
+                         "funnel}) instead of text tables")
     args = ap.parse_args(argv)
     try:
         doc = load(args.trace)
@@ -213,19 +348,37 @@ def main(argv=None) -> int:
         return 1
     events = doc["traceEvents"]
     n_req = sum(1 for t in tracks.values() if t.startswith("req:"))
+    meta = {
+        "trace": args.trace,
+        "events": len(events),
+        "tracks": len(tracks),
+        "requests": n_req,
+        "recorded": doc.get("otherData", {}).get("recorded"),
+        "dropped": doc.get("otherData", {}).get("dropped"),
+    }
+    if args.json:
+        print(json.dumps({
+            "meta": meta,
+            "waterfall": waterfall_data(events, tracks),
+            "attribution": attribution_data(events, tracks),
+            "hostdev": hostdev_data(events, tracks),
+            "funnel": funnel_data(events, tracks),
+        }, indent=1))
+        return 0
     print(f"{args.trace}: {len(events)} events, {len(tracks)} tracks "
-          f"({n_req} requests); recorded="
-          f"{doc.get('otherData', {}).get('recorded', '?')} dropped="
-          f"{doc.get('otherData', {}).get('dropped', '?')}")
+          f"({n_req} requests); recorded={meta['recorded'] or '?'} "
+          f"dropped={meta['dropped'] if meta['dropped'] is not None else '?'}")
     if args.validate_only:
         print("structure ok")
         return 0
     print()
-    print(waterfall(events, tracks))
+    print(waterfall_text(waterfall_data(events, tracks)))
     print()
-    print(attribution(events, tracks))
+    print(attribution_text(attribution_data(events, tracks)))
     print()
-    print(funnel(events, tracks))
+    print(hostdev_text(hostdev_data(events, tracks)))
+    print()
+    print(funnel_text(funnel_data(events, tracks)))
     return 0
 
 
