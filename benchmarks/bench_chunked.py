@@ -171,6 +171,8 @@ def main(argv=None):
 
     out = {
         "bench": "chunked",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_chunked.py",
         "models": [ctrl.base.model.cfg.name, ctrl.small.model.cfg.name],
         "num_short": args.num_short,
         "num_long": args.num_long,

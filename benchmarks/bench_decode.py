@@ -92,6 +92,8 @@ def main(argv=None):
 
     out = {
         "bench": "decode_loop",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_decode.py",
         "tokens": args.tokens,
         "reps": args.reps,
         "temperature": args.temperature,

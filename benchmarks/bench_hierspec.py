@@ -168,6 +168,8 @@ def main(argv=None):
 
     out = {
         "bench": "hierspec",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_hierspec.py",
         "models": [base_cfg.name, small_cfg.name],
         "pair": args.pair,
         "gamma": args.gamma,

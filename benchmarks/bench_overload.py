@@ -225,6 +225,8 @@ def main(argv=None):
 
     out = {
         "bench": "overload",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_overload.py",
         "models": [ctrl.base.model.cfg.name, ctrl.small.model.cfg.name],
         "num_requests": args.num_requests,
         "ops": args.ops,

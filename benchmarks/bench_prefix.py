@@ -162,6 +162,8 @@ def main(argv=None):
 
     out = {
         "bench": "prefix",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_prefix.py",
         "models": [ctrl.base.model.cfg.name, ctrl.small.model.cfg.name],
         "num_tasks": args.num_tasks,
         "num_samples": args.num_samples,

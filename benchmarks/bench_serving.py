@@ -127,6 +127,8 @@ def main(argv=None):
 
     out = {
         "bench": "serving",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_serving.py",
         "models": [base_cfg.name, small_cfg.name],
         "num_requests": args.num_requests,
         "reps": args.reps,

@@ -1,6 +1,7 @@
 """Telemetry overhead benchmark: serving throughput with tracing off /
-tracing on / tracing + metrics on / the full observability plane
-(tracing + metrics + rolling speculation-quality monitors).
+tracing on / tracing + metrics on / tracing + metrics + rolling
+speculation-quality monitors / the FULL plane (all of the above plus
+the compile sentinel and the device-memory watch).
 
 The tentpole contract being gated: tracing is zero-cost when off (the
 ``tracer is None`` guard is the only code a traced-less tick executes)
@@ -16,7 +17,7 @@ Workload: ``-n`` short prompts arriving one per tick
 arrivals), one reasoning step + short answer each, spec decode ON so
 the busiest telemetry path (per-round spans + accepted-length
 histogram) is exercised, prefix cache off (reps would otherwise erase
-the prefill work).  All three arms run back-to-back within each rep and
+the prefill work).  All five arms run back-to-back within each rep and
 the MEDIAN per-rep ratio is reported (interleaved-rep design — same
 methodology as bench_chunked/bench_prefix/bench_serving).
 
@@ -25,7 +26,8 @@ methodology as bench_chunked/bench_prefix/bench_serving).
 
 Emits BENCH_telemetry.json: per-arm req/s + traced/untraced ratios and
 the traced arm's event count.  CI gates ``req_s_ratio_trace >= 0.95``
-(tracing-on within 5% of off) and uploads the artifact.  Locally both
+AND ``req_s_ratio_full_plane >= 0.95`` (the whole plane — sentinel and
+memory watch included — within 5% of off) and uploads the artifact.  Locally both
 ratios sit at ~0.97-1.03x (parity — the per-tick tracing work is
 microseconds against millisecond ticks)."""
 
@@ -44,6 +46,7 @@ from repro.core.policies import StaticThreshold
 from repro.data.tasks import sample_task
 from repro.models.model import Model
 from repro.sampling.sample import SamplingParams
+from repro.serving.compile_watch import CompileWatch, MemoryWatch
 from repro.serving.engine import Engine
 from repro.serving.kv_manager import KVBudget, KVManager
 from repro.serving.monitors import MonitorConfig, Monitors
@@ -75,14 +78,16 @@ def _pairs(n: int, ops: int, seed: int):
 
 
 def _mk_sched(ctrl, batch: int, tracer=None, metrics=None,
-              monitors=None):
+              monitors=None, compile_watch=None, memory_watch=None):
     kv = KVManager(ctrl.base.model.cfg, ctrl.small.model.cfg,
                    KVBudget(total_bytes=1 << 26))
     return ContinuousScheduler(ctrl, kv, max_batch=batch,
                                context_capacity=MAX_LEN,
                                prefix_cache=False,
                                tracer=tracer, metrics=metrics,
-                               monitors=monitors)
+                               monitors=monitors,
+                               compile_watch=compile_watch,
+                               memory_watch=memory_watch)
 
 
 def _run_once(sched, pairs, rep: int):
@@ -120,17 +125,28 @@ def main(argv=None):
         "trace": _mk_sched(ctrl, args.batch, tracer=tracer),
         "trace_metrics": _mk_sched(ctrl, args.batch, tracer=Tracer(),
                                    metrics=ServingMetrics()),
-        # the full observability plane: tracer + metrics + rolling
-        # speculation-quality monitors (window pushes per round/step)
+        # tracer + metrics + rolling speculation-quality monitors
+        # (window pushes per round/step)
         "trace_metrics_monitors": _mk_sched(
             ctrl, args.batch, tracer=Tracer(), metrics=ServingMetrics(),
             monitors=Monitors(MonitorConfig())),
     }
+    # the FULL plane: everything above plus the compile sentinel (per-
+    # dispatch signature hashing + cost-model compiles) and the per-tick
+    # device-memory watch — the heaviest configuration serve.py can run
+    fp_tracer, fp_metrics = Tracer(), ServingMetrics()
+    fp_monitors = Monitors(MonitorConfig())
+    arms["full_plane"] = _mk_sched(
+        ctrl, args.batch, tracer=fp_tracer, metrics=fp_metrics,
+        monitors=fp_monitors,
+        compile_watch=CompileWatch(tracer=fp_tracer, metrics=fp_metrics,
+                                   monitors=fp_monitors),
+        memory_watch=MemoryWatch(metrics=fp_metrics))
     for sched in arms.values():
         _run_once(sched, pairs, 0)
     req_s = {k: [] for k in arms}
     ratios = {"trace": [], "trace_metrics": [],
-              "trace_metrics_monitors": []}
+              "trace_metrics_monitors": [], "full_plane": []}
     for rep in range(1, args.reps + 1):
         rs = {k: _run_once(s, pairs, rep)["req_s"]
               for k, s in arms.items()}
@@ -142,14 +158,18 @@ def main(argv=None):
     r_trace = _median(ratios["trace"])
     r_both = _median(ratios["trace_metrics"])
     r_mon = _median(ratios["trace_metrics_monitors"])
-    for k in ("off", "trace", "trace_metrics", "trace_metrics_monitors"):
+    r_full = _median(ratios["full_plane"])
+    for k in ("off", "trace", "trace_metrics", "trace_metrics_monitors",
+              "full_plane"):
         print(f"{k:22s} req/s {med[k]:7.2f}")
     print(f"traced/untraced req/s: trace {r_trace:.3f}x, trace+metrics "
-          f"{r_both:.3f}x, +monitors {r_mon:.3f}x "
-          f"(1.0 = no overhead; gate >= 0.95)")
+          f"{r_both:.3f}x, +monitors {r_mon:.3f}x, full plane "
+          f"{r_full:.3f}x (1.0 = no overhead; gate >= 0.95)")
 
     out = {
         "bench": "telemetry",
+        "schema": 1,
+        "generated_by": "benchmarks/bench_telemetry.py",
         "models": [ctrl.base.model.cfg.name, ctrl.small.model.cfg.name],
         "num_requests": args.num_requests,
         "ops": args.ops,
@@ -162,11 +182,14 @@ def main(argv=None):
         "req_s_ratio_trace": round(r_trace, 3),
         "req_s_ratio_trace_metrics": round(r_both, 3),
         "req_s_ratio_trace_metrics_monitors": round(r_mon, 3),
+        "req_s_ratio_full_plane": round(r_full, 3),
+        "full_plane_compiles": arms["full_plane"].compile_watch.as_dict(),
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out} (trace {r_trace:.3f}x, trace+metrics "
-          f"{r_both:.3f}x, +monitors {r_mon:.3f}x)")
+          f"{r_both:.3f}x, +monitors {r_mon:.3f}x, full plane "
+          f"{r_full:.3f}x)")
 
 
 if __name__ == "__main__":

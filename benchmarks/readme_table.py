@@ -11,13 +11,16 @@ refreshing any benchmark:
 
 ``--check`` exits nonzero when the README block differs from what the
 current JSON files produce (the docs CI job runs it, so a benchmark
-refresh that forgets the README fails fast)."""
+refresh that forgets the README fails fast), and also runs
+``tools/bench_history.py --check`` so an artifact missing its
+``schema``/``generated_by`` provenance stamps fails the same gate."""
 
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 
 START = "<!-- BENCH_TABLE_START -->"
@@ -89,12 +92,14 @@ def build_table() -> str:
             f"`BENCH_overload.json` |")
     d = _load("BENCH_telemetry.json")
     if d:
+        full = (f"; {d['req_s_ratio_full_plane']:.2f}x full plane"
+                if "req_s_ratio_full_plane" in d else "")
         rows.append(
             f"| Telemetry overhead | {d['num_requests']} spec-decode "
             f"requests, tracing off vs on vs on+metrics | "
             f"**{d['req_s_ratio_trace']:.2f}x** req/s traced "
-            f"({d['req_s_ratio_trace_metrics']:.2f}x with metrics; "
-            f"1.0 = free) | `BENCH_telemetry.json` |")
+            f"({d['req_s_ratio_trace_metrics']:.2f}x with metrics"
+            f"{full}; 1.0 = free) | `BENCH_telemetry.json` |")
     return "\n".join(rows)
 
 
@@ -119,6 +124,15 @@ def main(argv=None):
         if updated != current:
             sys.exit("README.md results table is stale: regenerate with "
                      "`python benchmarks/readme_table.py`")
+        # provenance gate: every artifact feeding the table must carry
+        # its schema/generated_by stamps (tools/bench_history.py)
+        history = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools",
+                                          "bench_history.py"), "--check"],
+            capture_output=True, text=True)
+        if history.returncode != 0:
+            sys.exit("BENCH_*.json provenance check failed:\n"
+                     + history.stderr.strip())
         print("README results table matches the checked-in BENCH_*.json")
         return
     if updated != current:

@@ -86,13 +86,28 @@ after the run for terminal scrapes.  ``--snapshot-every S`` flushes the
 (atomic renames — an interrupted run still leaves valid telemetry);
 both artifacts are also always flushed in a ``finally``.
 ``--monitor-window N`` sizes the rolling speculation-quality monitors
-(token/step acceptance, SLO burn, quarantine rate; 0 disables) that
-ride along whenever the plane is active — a firing monitor feeds the
-overload controller as a pressure input, so sustained acceptance
-collapse walks the ``--degrade`` ladder.  Artifacts for the sequential
-scheduler: ``--metrics-out`` serves end-of-run meter-derived metrics
-(``--trace`` is ignored with a warning — no tick timeline exists
-there).
+(token/step acceptance, SLO burn, quarantine rate, recompile storms; 0
+disables) that ride along whenever the plane is active — a firing
+monitor feeds the overload controller as a pressure input, so sustained
+acceptance collapse walks the ``--degrade`` ladder.  Artifacts for the
+sequential scheduler: ``--metrics-out`` serves end-of-run meter-derived
+metrics (``--trace`` is ignored with a warning — no tick timeline
+exists there).
+
+**Compile & device plane** (continuous scheduler): whenever tracing or
+metrics are on, a compile sentinel (serving/compile_watch.py) watches
+every engine dispatch's abstract signature — each distinct signature is
+one XLA compilation, counted per op, costed via ``cost_analysis()``,
+spanned on the ``compile`` tracer track and summarized in the
+``[compile]`` end-of-run line; post-warmup recompiles feed the
+recompile monitor (bucket churn walks the ``--degrade`` ladder) and a
+device-memory watch samples ``device.memory_stats()`` + model/KV-pool
+byte accounting into gauges and ``/status``.  The live
+FLOP/s-GB/s-intensity join is served at ``/roofline``;
+``--xla-profile-dir DIR`` additionally arms the admin ``/profile?
+seconds=S`` endpoint (an on-demand ``jax.profiler`` capture into DIR).
+SIGTERM/SIGINT flush the telemetry artifacts before exiting, so an
+orchestrator kill still leaves valid traces/metrics.
 
   PYTHONPATH=src python -m repro.launch.serve --scheme specreason -n 8
   PYTHONPATH=src python -m repro.launch.serve --scheme all -n 4 --threshold 5
@@ -109,7 +124,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import random
+import signal
 
 import jax
 
@@ -120,6 +137,8 @@ from ..data import tasks
 from ..data.evaluate import is_correct
 from ..sampling.sample import SamplingParams
 from ..serving.admin import AdminServer, StatusBoard
+from ..serving.compile_watch import (CompileWatch, MemoryWatch,
+                                     ProfilerCapture)
 from ..serving.faults import FaultInjector, FaultPlan
 from ..serving.kv_manager import KVBudget, KVManager
 from ..serving.loader import load_testbed_engines
@@ -264,14 +283,37 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
         monitors = Monitors(MonitorConfig(window=args.monitor_window,
                                           slo_tpot_s=args.slo_tpot))
     board = StatusBoard() if admin_on else None
+    # compile/device plane: the recompilation sentinel + device-memory
+    # watch ride along whenever any plane substrate is active.  Both only
+    # observe (the sentinel's cost-model compile is an abstract twin that
+    # never executes), so outputs stay token-identical plane-on/off.
+    plane_on = tracer is not None or metrics is not None
+    compile_watch = CompileWatch(tracer=tracer, metrics=metrics,
+                                 monitors=monitors) if plane_on else None
+    memory_watch = MemoryWatch(metrics=metrics) if plane_on else None
+    profiler = (ProfilerCapture(args.xla_profile_dir)
+                if args.xla_profile_dir else None)
 
     def _flush_artifacts() -> None:
         # crash-safe flush: atomic tmp-file renames, shared by the
-        # end-of-run finally and the periodic --snapshot-every path
+        # end-of-run finally, the periodic --snapshot-every path and the
+        # SIGTERM/SIGINT handlers
         if tracer is not None and args.trace:
             tracer.export(args.trace)
         if metrics is not None and args.metrics_out:
             atomic_write(args.metrics_out, metrics.render())
+
+    def _on_signal(signum, frame) -> None:
+        # orchestrator kill (SIGTERM) / Ctrl-C: flush the artifacts,
+        # then die by the default disposition so the exit status still
+        # reports the signal truthfully
+        _flush_artifacts()
+        signal.signal(signum, signal.SIG_DFL)
+        os.kill(os.getpid(), signum)
+
+    if args.trace or args.metrics_out:
+        for _sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(_sig, _on_signal)
 
     on_tick = None
     if args.snapshot_every is not None and (args.trace
@@ -296,10 +338,14 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                                 if args.verbose else None,
                                 tracer=tracer, metrics=metrics,
                                 monitors=monitors, status_board=board,
-                                on_tick=on_tick)
+                                on_tick=on_tick,
+                                compile_watch=compile_watch,
+                                memory_watch=memory_watch)
     admin = None
     if admin_on:
         admin = AdminServer(board=board, metrics=metrics, tracer=tracer,
+                            compile_watch=compile_watch,
+                            profiler=profiler,
                             port=args.admin_port).start()
         # flush: CI smoke discovers the OS-assigned port from this line
         # through a block-buffered subprocess pipe
@@ -407,6 +453,22 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
     if monitors is not None and monitors.alerts:
         for ev in monitors.alerts:
             print(f"[monitor] {ev}")
+    if compile_watch is not None:
+        cs = compile_watch.as_dict()
+        print(f"[compile] {cs['programs']} programs / {cs['compiles']} "
+              f"compiles ({cs['post_warmup']} post-warmup)", flush=True)
+        stats.update({"compile_programs": cs["programs"],
+                      "compiles": cs["compiles"],
+                      "post_warmup_compiles": cs["post_warmup"]})
+    if memory_watch is not None and sched.last_memory is not None:
+        mem = sched.last_memory
+        print(f"[memory] model={mem['model_bytes']} "
+              f"kv={sum(mem['pool_bytes'].values())} "
+              f"accounted={mem['accounted_bytes']} "
+              f"peak={mem['peak_bytes']} bytes "
+              f"({mem['backend']})", flush=True)
+        stats.update({"memory_accounted_bytes": mem["accounted_bytes"],
+                      "memory_peak_bytes": mem["peak_bytes"]})
     print(json.dumps(stats), flush=True)
     if admin is not None:
         if args.admin_linger > 0:
@@ -541,7 +603,8 @@ def main(argv=None):
                          "HTTP plane on 127.0.0.1:PORT (0 = OS-assigned, "
                          "printed) — /healthz, /metrics (live Prometheus "
                          "scrape), /status (per-tick scheduler snapshot), "
-                         "/requests/<id>, /trace?last=N")
+                         "/requests/<id>, /trace?last=N, /roofline, and "
+                         "— with --xla-profile-dir — /profile?seconds=S")
     ap.add_argument("--admin-linger", type=float, default=0.0, metavar="S",
                     help="keep the admin endpoints up S seconds after the "
                          "run drains (terminal scrapes see the same bytes "
@@ -551,6 +614,11 @@ def main(argv=None):
                     help="flush the --trace/--metrics-out artifacts every "
                          "S seconds during the run (atomic renames) in "
                          "addition to the end-of-run flush")
+    ap.add_argument("--xla-profile-dir", default=None, metavar="DIR",
+                    help="arm the admin /profile?seconds=S endpoint: an "
+                         "on-demand jax.profiler capture written under "
+                         "DIR/capture_NNN (one capture at a time; needs "
+                         "--admin-port)")
     ap.add_argument("--monitor-window", type=int, default=64, metavar="N",
                     help="rolling speculation-quality monitor window in "
                          "samples (token/step acceptance, SLO burn, "
@@ -585,6 +653,9 @@ def main(argv=None):
         ap.error("--admin-port/--snapshot-every ride on the continuous "
                  "scheduler (the admin plane is fed by per-tick "
                  "snapshots); add --scheduler continuous")
+    if args.xla_profile_dir is not None and args.admin_port is None:
+        ap.error("--xla-profile-dir arms the admin /profile endpoint; "
+                 "add --admin-port (and --scheduler continuous)")
     # --trace/--metrics-out on the sequential path: warn instead of
     # erroring so A/B runs produce comparable artifacts — the Meter
     # counters back an end-of-run exposition; a tick timeline does not

@@ -16,6 +16,13 @@ per-tick state while the run is live:
                              tracer track as a JSON event list)
     GET /trace?last=N     -> Chrome-trace JSON of the last N ring events
                              (full ring without ?last=)
+    GET /roofline         -> live per-op roofline join from the compile
+                             sentinel: compile counts + cost-model
+                             FLOPs/bytes over measured device seconds
+    GET /profile?seconds=S-> run a jax.profiler capture for S seconds
+                             into the attached profiler's directory and
+                             return the artifact path (409 while another
+                             capture is in flight)
 
 **Snapshot locking contract.**  The scheduler thread publishes one
 immutable :class:`SchedulerSnapshot` per tick through a
@@ -33,7 +40,11 @@ never blocks the tick loop.
 
 The server binds 127.0.0.1 by default and port 0 means OS-assigned
 (``.port`` reports the real one) — serve.py prints it for CI discovery.
-No state-mutating endpoints exist; this is a read-only plane."""
+Every endpoint except ``/profile`` is read-only; ``/profile`` mutates
+nothing in the serving plane (it starts/stops a profiler capture whose
+artifacts land outside the scheduler's state), is latched to one
+capture at a time, and only exists when serve.py was given
+``--xla-profile-dir``."""
 
 from __future__ import annotations
 
@@ -59,6 +70,10 @@ class SchedulerSnapshot:
     level: int                          # degradation-ladder level L0..L4
     counts: Dict[str, int]              # timeouts/shed/quarantines/...
     monitors: Optional[Dict[str, Any]]  # Monitors.as_dict() or None
+    # compile/device plane (both None unless the watches are attached):
+    # MemoryWatch.sample() and CompileWatch.as_dict() of the tick
+    memory: Optional[Dict[str, Any]] = None
+    compile: Optional[Dict[str, Any]] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {
@@ -71,6 +86,8 @@ class SchedulerSnapshot:
             "level": self.level,
             "counts": self.counts,
             "monitors": self.monitors,
+            "memory": self.memory,
+            "compile": self.compile,
         }
 
 
@@ -130,11 +147,16 @@ class _AdminHandler(BaseHTTPRequestHandler):
                 self._route_request(path[len("/requests/"):])
             elif path == "/trace":
                 self._route_trace(url.query)
+            elif path == "/roofline":
+                self._route_roofline()
+            elif path == "/profile":
+                self._route_profile(url.query)
             else:
                 self._json(404, {"error": f"no route {path!r}",
                                  "routes": ["/healthz", "/metrics",
                                             "/status", "/requests/<id>",
-                                            "/trace?last=N"]})
+                                            "/trace?last=N", "/roofline",
+                                            "/profile?seconds=S"]})
         except (BrokenPipeError, ConnectionResetError):
             pass  # client went away mid-scrape
 
@@ -193,6 +215,40 @@ class _AdminHandler(BaseHTTPRequestHandler):
                 return
         self._json(200, tracer.chrome_trace(last=last))
 
+    def _route_roofline(self) -> None:
+        watch = self.server.compile_watch  # type: ignore[attr-defined]
+        if watch is None:
+            self._json(404, {"error": "compile watch not attached "
+                                      "(run with --trace or --metrics-out "
+                                      "to enable the compile sentinel)"})
+            return
+        self._json(200, watch.roofline())
+
+    def _route_profile(self, query: str) -> None:
+        profiler = self.server.profiler  # type: ignore[attr-defined]
+        if profiler is None:
+            self._json(404, {"error": "profiler not attached "
+                                      "(run with --xla-profile-dir)"})
+            return
+        qs = parse_qs(query)
+        try:
+            seconds = float(qs["seconds"][0]) if "seconds" in qs else 1.0
+        except ValueError:
+            self._json(400, {"error": "?seconds= must be a number"})
+            return
+        # lazy import: only reachable with a profiler attached, which
+        # implies the jax-backed serving stack is loaded anyway — the
+        # module itself stays stdlib-only for everything else
+        from .compile_watch import ProfilerBusyError
+        try:
+            self._json(200, profiler.capture(seconds))
+        except ValueError as e:                  # bad seconds range
+            self._json(400, {"error": str(e)})
+        except ProfilerBusyError as e:
+            self._json(409, {"error": str(e)})
+        except Exception as e:                   # profiler backend failure
+            self._json(500, {"error": f"{type(e).__name__}: {e}"})
+
 
 class AdminServer:
     """Owns the ThreadingHTTPServer + its daemon serve thread.  All
@@ -201,13 +257,16 @@ class AdminServer:
 
     def __init__(self, board: Optional[StatusBoard] = None,
                  metrics: Any = None, tracer: Any = None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 compile_watch: Any = None, profiler: Any = None):
         self._httpd = ThreadingHTTPServer((host, port), _AdminHandler)
         self._httpd.daemon_threads = True
         # the handler reads these off the server instance
         self._httpd.board = board          # type: ignore[attr-defined]
         self._httpd.metrics = metrics      # type: ignore[attr-defined]
         self._httpd.tracer = tracer        # type: ignore[attr-defined]
+        self._httpd.compile_watch = compile_watch  # type: ignore[attr-defined]
+        self._httpd.profiler = profiler    # type: ignore[attr-defined]
         self._thread: Optional[threading.Thread] = None
 
     @property

@@ -73,7 +73,8 @@ class BatchEngine:
     def __init__(self, model: Model, params, batch: int,
                  capacity: int = 1024,
                  buckets: Sequence[int] = DEFAULT_BUCKETS, name: str = "",
-                 pad_id: int = 0, tracer: Optional[Tracer] = None):
+                 pad_id: int = 0, tracer: Optional[Tracer] = None,
+                 compile_watch=None):
         if model.cfg.has_ssm:
             raise ValueError(
                 "BatchEngine is attention-only: ragged batched rows rely on "
@@ -95,6 +96,13 @@ class BatchEngine:
         # recording site is guarded on ``tracer is not None`` (the
         # zero-cost-when-off contract — see serving/telemetry.py).
         self.tracer = tracer
+        # optional compile sentinel (serving/compile_watch.py): every
+        # _dispatch reports its (op, abstract signature) so distinct XLA
+        # compilations are counted per op and costed at compile time.
+        # None (the default) leaves the dispatch path bit-identical to
+        # the watch-less engine — same contract as the tracer.
+        self.compile_watch = compile_watch
+        self._last_cost: Optional[dict] = None
         state = model.init_state(batch, capacity)
         self.state = dataclasses.replace(
             state, pos=jnp.zeros((batch,), jnp.int32))
@@ -192,7 +200,14 @@ class BatchEngine:
     def _dispatch(self, op: str, fn: Callable, *args):
         """Run one jitted engine call, wrapped in a
         ``jax.profiler.TraceAnnotation`` named ``<engine>.<op>`` when the
-        attached tracer asks for device-profile alignment."""
+        attached tracer asks for device-profile alignment.  With a
+        compile watch attached, the call's abstract signature is recorded
+        first (a first-seen signature is a compile event) and its
+        cost-model FLOPs/bytes are held in ``_last_cost`` for the
+        matching ``_bracket`` to stamp onto the parent span."""
+        cw = self.compile_watch
+        if cw is not None:
+            self._last_cost = cw.observe(self.name, op, fn, args)
         tr = self.tracer
         if tr is not None and tr.annotate:
             with jax.profiler.TraceAnnotation(f"{self.name}.{op}"):
@@ -213,6 +228,16 @@ class BatchEngine:
         not None``."""
         tr = self.tracer
         track = engine_track(self.name)
+        cw = self.compile_watch
+        if cw is not None:
+            # the measured device window is the live roofline's
+            # denominator; the cost-model numerator rides the parent span
+            cw.note_device(self.name, op, t1 - td)
+            cost = self._last_cost
+            if cost is not None:
+                args = dict(args)
+                args["flops"] = cost.get("flops")
+                args["hlo_bytes"] = cost.get("bytes")
         tr.span(track, op, t0, t1, args)
         tr.span(track, f"{op}.dispatch", t0, td, {"side": "host"})
         tr.span(track, f"{op}.block_until_ready", td, t1,
@@ -676,10 +701,14 @@ class BatchEngine:
             td = time.perf_counter()
             tokens = sum(len(s) * bs for s in slot_lists)
             track = engine_track(self.name)
-            self.tracer.span(track, "cache_seed", t0, td,
-                             {"rows": len(rows), "tokens": tokens,
-                              "kv_bytes": 2 * tokens
-                              * self._kv_token_bytes})
+            seed_args = {"rows": len(rows), "tokens": tokens,
+                         "kv_bytes": 2 * tokens * self._kv_token_bytes}
+            cost = self._last_cost if self.compile_watch is not None \
+                else None
+            if cost is not None:
+                seed_args["flops"] = cost.get("flops")
+                seed_args["hlo_bytes"] = cost.get("bytes")
+            self.tracer.span(track, "cache_seed", t0, td, seed_args)
             self.tracer.span(track, "cache_seed.dispatch", t0, td,
                              {"side": "host"})
 

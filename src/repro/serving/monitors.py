@@ -66,6 +66,10 @@ class MonitorConfig:
     min_step_accept: float = 0.25    # step-level acceptance-rate floor
     max_burn_rate: float = 0.5       # SLO-violating finish fraction cap
     max_quarantine_per_tick: float = 0.25
+    # post-warmup recompiles per tick (compile_watch sentinel); 0.25
+    # lets a one-off bucket growth pass while sustained signature churn
+    # (a recompile storm) fires within a window
+    max_recompiles_per_tick: float = 0.25
     # SLOs the burn monitor checks finishes against (None = not checked;
     # with both None the burn monitor never judges)
     slo_ttft_s: Optional[float] = None
@@ -304,6 +308,36 @@ class QuarantineMonitor(_Monitor):
         return self._per_tick.count
 
 
+class RecompileMonitor(_Monitor):
+    """Recompile-storm rate: mean post-warmup XLA compilations per tick
+    over the last ``window`` ticks, fed by the compile sentinel
+    (serving/compile_watch.py).  A steady-state serve runs with a fixed
+    program set (the bucketed-engine contract), so sustained signature
+    churn after warmup is pathology — bucket thrash — and walking the
+    degradation ladder (shrink gamma, cap decode) actively shrinks the
+    shape space.  Same observe()/roll_tick() split as the quarantine
+    monitor."""
+
+    def __init__(self, cfg: MonitorConfig):
+        super().__init__("recompile", cfg, cfg.max_recompiles_per_tick,
+                         "high")
+        self._per_tick = RollingWindow(cfg.window)
+        self._this_tick = 0
+
+    def observe(self) -> None:
+        self._this_tick += 1
+
+    def roll_tick(self) -> None:
+        self._per_tick.push(self._this_tick)
+        self._this_tick = 0
+
+    def value(self) -> Optional[float]:
+        return self._per_tick.mean()
+
+    def samples(self) -> int:
+        return self._per_tick.count
+
+
 class Monitors:
     """The scheduler-facing monitor suite.  The scheduler calls the
     ``observe_*`` hooks from the sites where the signals already exist
@@ -319,12 +353,13 @@ class Monitors:
         self.step_funnel = StepFunnelMonitor(self.cfg)
         self.slo_burn = SloBurnMonitor(self.cfg)
         self.quarantine = QuarantineMonitor(self.cfg)
+        self.recompile = RecompileMonitor(self.cfg)
         self.alerts: List[SchedEvent] = []      # every transition, in order
 
     @property
     def all(self) -> Tuple[_Monitor, ...]:
         return (self.token_accept, self.step_funnel, self.slo_burn,
-                self.quarantine)
+                self.quarantine, self.recompile)
 
     # ----------------------------------------------------- observation
     def observe_round(self, proposed: int, accepted: int) -> None:
@@ -340,12 +375,17 @@ class Monitors:
     def observe_quarantine(self) -> None:
         self.quarantine.observe()
 
+    def observe_recompile(self) -> None:
+        """A post-warmup compile event (the sentinel's hook)."""
+        self.recompile.observe()
+
     # ------------------------------------------------------ evaluation
     def on_tick(self, tick: int) -> List[SchedEvent]:
         """Roll the per-tick windows and evaluate every alarm; returns
         one ``kind="alert"`` event per transition this tick (empty
         almost always)."""
         self.quarantine.roll_tick()
+        self.recompile.roll_tick()
         events: List[SchedEvent] = []
         for mon in self.all:
             transition = mon.evaluate()

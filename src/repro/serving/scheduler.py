@@ -448,7 +448,9 @@ class ContinuousScheduler:
                  monitors: Optional[Monitors] = None,
                  status_board: Optional[StatusBoard] = None,
                  on_tick: Optional[Callable[[SchedulerSnapshot],
-                                            None]] = None):
+                                            None]] = None,
+                 compile_watch=None,
+                 memory_watch=None):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -480,16 +482,29 @@ class ContinuousScheduler:
         self.monitors = monitors
         self.status_board = status_board
         self.on_tick = on_tick
+        # compile/device plane (serving/compile_watch.py): the sentinel
+        # observes every engine dispatch's abstract signature (threaded
+        # into both engines below); the memory watch samples
+        # device.memory_stats() + the host-side byte accounting once per
+        # tick.  Both None by default — same zero-cost-when-off contract
+        # as tracer/metrics/monitors.
+        self.compile_watch = compile_watch
+        if compile_watch is not None and compile_watch.monitors is None:
+            compile_watch.monitors = monitors
+        self.memory_watch = memory_watch
+        self.last_memory: Optional[Dict[str, object]] = None
         self.base_be = BatchEngine(controller.base.model,
                                    controller.base.params, max_batch,
                                    engine_capacity,
                                    name=f"cb-{controller.base.name}",
-                                   tracer=tracer)
+                                   tracer=tracer,
+                                   compile_watch=compile_watch)
         self.small_be = BatchEngine(controller.small.model,
                                     controller.small.params, max_batch,
                                     engine_capacity,
                                     name=f"cb-{controller.small.name}",
-                                    tracer=tracer)
+                                    tracer=tracer,
+                                    compile_watch=compile_watch)
         self.spec_be = BatchSpecEngine(self.base_be, self.small_be,
                                        self.gamma) if self.spec else None
         self.pools = {
@@ -552,6 +567,21 @@ class ContinuousScheduler:
         # would retrace per call; a per-request host split would dispatch
         # per request)
         self._split_jit = jax.jit(jax.vmap(jax.random.split))
+        # static byte accounting for the memory watch: model params +
+        # dense decode-state caches per engine, paged-pool capacity per
+        # engine (num_blocks x per-block KV bytes)
+        if memory_watch is not None:
+            for be in (self.base_be, self.small_be):
+                n = sum(int(x.nbytes)
+                        for x in jax.tree_util.tree_leaves(be.params)
+                        if hasattr(x, "nbytes"))
+                for arr in (be.state.k, be.state.v):
+                    if arr is not None:
+                        n += int(arr.nbytes)
+                memory_watch.note_model(n)
+            for which, p in self.pools.items():
+                memory_watch.note_pool(
+                    which, p.num_blocks * kv.block_bytes(which))
 
     # ------------------------------------------------------------- intake
     def submit(self, task: Task, key: Optional[jax.Array] = None,
@@ -1217,6 +1247,10 @@ class ContinuousScheduler:
         there is work left."""
         self.ticks += 1
         tr, mt = self.tracer, self.metrics
+        if self.compile_watch is not None:
+            # compiles observed from here on belong to this tick (the
+            # sentinel's post-warmup window is tick-based)
+            self.compile_watch.begin_tick(self.ticks)
         t_tick0 = time.perf_counter() if tr is not None else 0.0
         # fault injection first: arm this tick's plan entries (pool holds
         # claim/release, stall windows open) so the rest of the tick sees
@@ -1323,6 +1357,10 @@ class ContinuousScheduler:
             # (on_event + tracer instant on the scheduler track)
             for ev in mon.on_tick(self.ticks):
                 self._emit(ev.kind, str(ev), **ev.fields)
+        if self.memory_watch is not None:
+            # one device-memory sample per tick (updates the gauges +
+            # high-watermark internally; the snapshot embeds the dict)
+            self.last_memory = self.memory_watch.sample()
         if mt is not None:
             mt.ticks.inc()
             mt.queue_depth.set(len(self.queue))
@@ -1347,6 +1385,14 @@ class ContinuousScheduler:
             tr.counter("queue_depth",
                        {"queued": float(len(self.queue)),
                         "active": float(len(self.active))}, t=t_tick1)
+            if self.last_memory is not None:
+                mem_vals = {"accounted":
+                            float(self.last_memory["accounted_bytes"]),
+                            "peak": float(self.last_memory["peak_bytes"])}
+                if self.last_memory["device_bytes_in_use"] is not None:
+                    mem_vals["device_in_use"] = float(
+                        self.last_memory["device_bytes_in_use"])
+                tr.counter("memory_bytes", mem_vals, t=t_tick1)
         if self.status_board is not None or self.on_tick is not None:
             # admin plane: publish one immutable snapshot per tick (the
             # lock is held only for the reference swap) and fire the
@@ -1721,7 +1767,11 @@ class ContinuousScheduler:
                 "submitted": self._submitted,
             },
             monitors=self.monitors.as_dict()
-            if self.monitors is not None else None)
+            if self.monitors is not None else None,
+            memory=dict(self.last_memory)
+            if self.last_memory is not None else None,
+            compile=self.compile_watch.as_dict()
+            if self.compile_watch is not None else None)
 
     def resilience_stats(self) -> Dict[str, object]:
         """The run's failure-lifecycle and overload-control counters

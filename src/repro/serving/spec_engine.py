@@ -248,13 +248,21 @@ class BatchSpecEngine:
                     greedy[i] = items[i].greedy
                     stop_mask[i] = stop_mask_items[i]
                 tr = self.base_be.tracer
+                cw = self.base_be.compile_watch
+                acc_args = (jnp.asarray(toks), jnp.asarray(qprobs),
+                            jnp.asarray(logits), jnp.asarray(bonus),
+                            jnp.asarray(g_arr), jnp.asarray(key_mat),
+                            jnp.asarray(stop_arr), jnp.asarray(stop_mask),
+                            jnp.asarray(greedy), params)
+                # the one jitted program this engine calls directly: the
+                # compile sentinel covers it the same way the BatchEngine
+                # dispatches are covered
+                cost = cw.observe(self.base_be.name, "accept_prog",
+                                  acceptance_step, acc_args) \
+                    if cw is not None else None
                 t_a0 = time.perf_counter() if tr is not None else 0.0
                 suffix, m, n_acc, hit_stop, new_keys = acceptance_step(
-                    jnp.asarray(toks), jnp.asarray(qprobs),
-                    jnp.asarray(logits), jnp.asarray(bonus),
-                    jnp.asarray(g_arr), jnp.asarray(key_mat),
-                    jnp.asarray(stop_arr), jnp.asarray(stop_mask),
-                    jnp.asarray(greedy), params)
+                    *acc_args)
                 t_ad = time.perf_counter() if tr is not None else 0.0
                 suffix = np.asarray(suffix)       # the host sync: the
                 m = np.asarray(m)                 # reconcile below needs
@@ -269,6 +277,12 @@ class BatchSpecEngine:
                     t_a1 = time.perf_counter()
                     track = engine_track(self.base_be.name)
                     args = {"rows": len(judge), "gamma": gam}
+                    if cost is not None:
+                        args["flops"] = cost.get("flops")
+                        args["hlo_bytes"] = cost.get("bytes")
+                    if cw is not None:
+                        cw.note_device(self.base_be.name, "accept_prog",
+                                       t_a1 - t_ad)
                     tr.span(track, "accept_prog", t_a0, t_a1, args)
                     tr.span(track, "accept_prog.dispatch", t_a0, t_ad,
                             {"side": "host"})

@@ -109,6 +109,7 @@ class SchedEvent(str):
 
 # well-known track names (requests get "req:<id>")
 TRACK_SCHED = "scheduler"
+TRACK_COMPILE = "compile"     # compile-sentinel events (compile_watch.py)
 
 
 def engine_track(name: str) -> str:
@@ -461,6 +462,51 @@ class ServingMetrics:
             "specreason_kv_pool_occupancy",
             "Claimed fraction of the paged KV block pool.",
             labelnames=("pool",))
+        # compile/device plane (compile_watch.py)
+        self.compiles = self._Labelled(r.counter(
+            "specreason_compiles_total",
+            "Distinct XLA compilations observed by the sentinel.",
+            labelnames=("engine", "op")))
+        self.post_warmup_compiles = self._Labelled(r.counter(
+            "specreason_post_warmup_compiles_total",
+            "Sentinel compilations past the warmup window (recompiles).",
+            labelnames=("engine", "op")))
+        self.compile_seconds = self._Labelled(r.counter(
+            "specreason_compile_seconds_total",
+            "Wall seconds spent in sentinel-observed compilations.",
+            labelnames=("engine", "op")))
+        self.memory_bytes = self._Labelled(r.gauge(
+            "specreason_device_memory_bytes",
+            "Device-memory accounting (model / kv_pool_* / accounted "
+            "estimates; device_in_use where the backend reports it).",
+            labelnames=("kind",)))
+        self.memory_peak_bytes = r.gauge(
+            "specreason_device_memory_peak_bytes",
+            "High-watermark of device bytes in use (or the accounted "
+            "estimate where the backend keeps no allocator stats).")
+
+    class _Labelled:
+        """Prometheus-client-style ``metric.labels(engine=..).inc()``
+        sugar over this registry's kwargs-labelled metrics."""
+
+        class _Bound:
+            def __init__(self, metric: Any, labels: Dict[str, Any]):
+                self._metric, self._labels = metric, labels
+
+            def inc(self, n: float = 1.0) -> None:
+                self._metric.inc(n, **self._labels)
+
+            def set(self, v: float) -> None:
+                self._metric.set(v, **self._labels)
+
+            def value(self) -> float:
+                return self._metric.value(**self._labels)
+
+        def __init__(self, metric: Any):
+            self.metric = metric
+
+        def labels(self, **labels: Any) -> "ServingMetrics._Labelled._Bound":
+            return self._Bound(self.metric, labels)
 
     def render(self) -> str:
         return self.registry.render()

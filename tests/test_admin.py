@@ -1,8 +1,9 @@
 """Admin plane: in-process HTTP endpoint tests against a real drained
 scheduler (no subprocess — tools/admin_smoke.py covers the live-run
-path in CI).  Exercises all five routes, the 404 hints for absent
-substrates, ?last= ring slicing, the StatusBoard publish/latest
-handoff, and the crash-safe atomic artifact write."""
+path in CI).  Exercises all seven routes (including /roofline and the
+latched /profile), the 404 hints for absent substrates, ?last= ring
+slicing, the StatusBoard publish/latest handoff, and the crash-safe
+atomic artifact write."""
 
 import json
 import os
@@ -22,6 +23,7 @@ from repro.sampling.sample import SamplingParams
 from repro.serving.engine import Engine
 from repro.serving.kv_manager import KVBudget, KVManager
 from repro.serving.admin import AdminServer, SchedulerSnapshot, StatusBoard
+from repro.serving.compile_watch import CompileWatch, ProfilerCapture
 from repro.serving.monitors import MonitorConfig, Monitors
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.telemetry import ServingMetrics, Tracer, atomic_write
@@ -46,7 +48,7 @@ def _get(port, path):
 
 
 @pytest.fixture(scope="module")
-def served():
+def served(tmp_path_factory):
     """One drained scheduler with the full observability substrate and a
     live AdminServer on an OS-assigned port."""
     bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
@@ -60,21 +62,26 @@ def served():
     metrics = ServingMetrics()
     board = StatusBoard()
     mon = Monitors(MonitorConfig(window=8, min_samples=1))
+    watch = CompileWatch(tracer=tracer, metrics=metrics)
     kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
     cs = ContinuousScheduler(ctrl, kv, max_batch=4, context_capacity=128,
                              chunked_prefill=True, max_prefill_tokens=16,
                              tracer=tracer, metrics=metrics,
-                             monitors=mon, status_board=board)
+                             monitors=mon, status_board=board,
+                             compile_watch=watch)
     rng = random.Random(5)
     reqs = [tasks.sample_task(rng, min_steps=8, max_steps=10)
             for _ in range(2)]
     handles = [cs.submit(t, key=jax.random.PRNGKey(50 + i))
                for i, t in enumerate(reqs)]
     cs.drain(jax.random.PRNGKey(9))
+    profiler = ProfilerCapture(str(tmp_path_factory.mktemp("xla_prof")))
     admin = AdminServer(board=board, metrics=metrics.registry,
-                        tracer=tracer).start()
+                        tracer=tracer, compile_watch=watch,
+                        profiler=profiler).start()
     yield {"admin": admin, "cs": cs, "tracer": tracer,
-           "metrics": metrics, "handles": handles}
+           "metrics": metrics, "handles": handles, "watch": watch,
+           "profiler": profiler}
     admin.stop()
 
 
@@ -171,16 +178,61 @@ def test_trace_full_and_sliced(served):
     assert status == 400
 
 
+def test_roofline_endpoint_serves_live_join(served):
+    status, body = _get(served["admin"].port, "/roofline")
+    assert status == 200
+    doc = json.loads(body)
+    assert doc["compiles"] > 0 and doc["programs"] > 0
+    assert doc["warmup_ticks"] == served["watch"].warmup_ticks
+    assert doc["ops"], "drained run produced no per-op roofline rows"
+    ops = {(r["engine"], r["op"]) for r in doc["ops"]}
+    assert any(op == "prefill" for _, op in ops)
+    # tracing was on, so device time was measured and rates computed
+    assert any(r["gflops_per_s"] for r in doc["ops"])
+    # the endpoint serves exactly the watch's live aggregate
+    assert doc == json.loads(json.dumps(served["watch"].roofline()))
+
+
+def test_status_carries_compile_summary(served):
+    status, body = _get(served["admin"].port, "/status")
+    doc = json.loads(body)
+    assert doc["compile"] == served["watch"].as_dict()
+    assert doc["compile"]["programs"] > 0
+
+
+def test_profile_endpoint_captures_and_latches(served, tmp_path):
+    import os
+    port = served["admin"].port
+    status, body = _get(port, "/profile?seconds=0.05")
+    assert status == 200
+    doc = json.loads(body)
+    assert os.path.isdir(doc["dir"]) and doc["capture"] == 0
+    status, body = _get(port, "/profile?seconds=nope")
+    assert status == 400
+    status, body = _get(port, "/profile?seconds=0")
+    assert status == 400 and "seconds" in json.loads(body)["error"]
+    # a held latch maps to 409, not a hang
+    assert served["profiler"]._lock.acquire(blocking=False)
+    try:
+        status, body = _get(port, "/profile?seconds=0.05")
+        assert status == 409
+    finally:
+        served["profiler"]._lock.release()
+
+
 def test_unknown_route_lists_routes(served):
     status, body = _get(served["admin"].port, "/nope")
     assert status == 404
-    assert "/status" in json.loads(body)["routes"]
+    routes = json.loads(body)["routes"]
+    assert "/status" in routes and "/roofline" in routes
+    assert "/profile?seconds=S" in routes
 
 
 def test_missing_substrates_404_with_hint():
     admin = AdminServer().start()            # nothing attached
     try:
-        for path in ("/metrics", "/trace", "/requests/x"):
+        for path in ("/metrics", "/trace", "/requests/x", "/roofline",
+                     "/profile"):
             status, body = _get(admin.port, path)
             assert status == 404, path
             assert "error" in json.loads(body), path

@@ -241,7 +241,7 @@ def test_monitors_as_dict_is_json_shape():
     m.observe_round(4, 2)
     d = m.as_dict()
     assert set(d) == {"token_accept", "step_accept", "slo_burn",
-                      "quarantine"}
+                      "quarantine", "recompile"}
     assert d["token_accept"]["value"] == 0.5
     assert d["token_accept"]["direction"] == "low"
     assert d["step_accept"]["fallbacks"] == 0

@@ -1,6 +1,14 @@
 """Roofline infrastructure: the HLO cost parser must agree with
 cost_analysis() on unrolled programs and correctly multiply while-loop
-bodies by trip counts (which cost_analysis does NOT)."""
+bodies by trip counts (which cost_analysis does NOT); the compile
+sentinel's live cost capture must join against the same parser on the
+engines' paged prefill/extend/feed jits; and the trace analyzer's
+roofline view must exclude the host/device sub-spans (no double
+counting)."""
+
+import importlib.util
+import os
+import random
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +18,16 @@ from repro.roofline.hlo_cost import HloModule, module_cost
 from repro.roofline.analysis import model_flops_estimate
 from repro.models.config import INPUT_SHAPES
 from repro.configs.registry import ARCHS
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_trace_report():
+    spec = importlib.util.spec_from_file_location(
+        "trace_report", os.path.join(ROOT, "tools", "trace_report.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def _ca(compiled):
@@ -91,6 +109,123 @@ def test_dot_flops_with_batch_dims():
     c = jax.jit(f).lower(a, b).compile()
     parsed = module_cost(c.as_text())
     assert parsed.flops == pytest.approx(2 * 4 * 8 * 16 * 32, rel=1e-6)
+
+
+def test_sentinel_cost_matches_hlo_cost_on_loopless_program():
+    """The live join's static side: the sentinel's cost_analysis()
+    capture and the HLO parser agree on a program without loops."""
+    from repro.serving.compile_watch import CompileWatch
+    cw = CompileWatch(keep_hlo=True)
+    fn = jax.jit(lambda a, b: jnp.tanh(a @ b))
+    args = (jnp.ones((4, 64)), jnp.ones((64, 32)))
+    cost = cw.observe("e", "mm", fn, args)
+    assert cost["flops"] > 0 and cost["bytes"] > 0
+    (sig,) = cw.signatures("e", "mm")
+    parsed = module_cost(cw.hlo_text[("e", "mm")][sig])
+    assert parsed.flops == pytest.approx(cost["flops"], rel=1e-6)
+    # and both agree with a direct cost_analysis of the same program
+    truth = _ca(fn.lower(*args).compile())["flops"]
+    assert cost["flops"] == pytest.approx(truth, rel=1e-6)
+
+
+def test_sentinel_cost_joins_hlo_cost_on_engine_jits():
+    """On a 1-layer micro pair (scan trip count 1, so cost_analysis's
+    scan undercount is moot) the sentinel's captured cost for the paged
+    prefill / extend / feed jits matches the trip-count-aware HLO
+    parser within tolerance.  The fused decode loop is excluded by
+    construction: its while_loop body is exactly what cost_analysis
+    undercounts (see test_cost_analysis_undercounts_scans).  Tolerance
+    is 10%: the parser models dot/collective flops while
+    cost_analysis also counts elementwise lanes, a few-percent skew
+    that is largest on micro-sized layers like these."""
+    from repro.core.controller import SpecReason, SpecReasonConfig
+    from repro.core.policies import StaticThreshold
+    from repro.data import tasks
+    from repro.models.config import ModelConfig
+    from repro.models.model import Model
+    from repro.sampling.sample import SamplingParams
+    from repro.serving.compile_watch import CompileWatch
+    from repro.serving.engine import Engine
+    from repro.serving.kv_manager import KVBudget, KVManager
+    from repro.serving.scheduler import ContinuousScheduler
+    from repro.tokenizer import toy as tk
+
+    b_cfg = ModelConfig(name="rb", family="dense", n_layers=1, d_model=64,
+                        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+    s_cfg = ModelConfig(name="rs", family="dense", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                        vocab_size=tk.VOCAB_SIZE).validate()
+    bm, sm = Model(b_cfg), Model(s_cfg)
+    base = Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256)
+    small = Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256)
+    ctrl = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=32, max_steps=4,
+        sampling=SamplingParams(temperature=0.0)))
+    cw = CompileWatch(keep_hlo=True)
+    kv = KVManager(b_cfg, s_cfg, KVBudget(total_bytes=1 << 26))
+    cs = ContinuousScheduler(ctrl, kv, max_batch=2, context_capacity=128,
+                             chunked_prefill=True, max_prefill_tokens=16,
+                             compile_watch=cw)
+    rng = random.Random(3)
+    for i in range(2):
+        cs.submit(tasks.sample_task(rng, min_steps=6, max_steps=8),
+                  key=jax.random.PRNGKey(i))
+    cs.drain(jax.random.PRNGKey(9))
+    checked = 0
+    for (engine, op), sigs in cw.hlo_text.items():
+        if op not in ("prefill", "extend", "feed"):
+            continue
+        costs = cw.signature_costs(engine, op)
+        for sig, hlo in sigs.items():
+            cost = costs[sig]
+            assert cost is not None and cost["flops"]
+            parsed = module_cost(hlo)
+            assert parsed.flops == pytest.approx(cost["flops"],
+                                                 rel=0.10), \
+                f"{engine}.{op}: parsed {parsed.flops} vs " \
+                f"cost_analysis {cost['flops']}"
+            checked += 1
+    assert checked > 0, "no prefill/extend/feed programs captured"
+
+
+def test_trace_report_roofline_view_excludes_subspans():
+    """The analyzer's roofline view counts the parent bracket span once
+    — never its .dispatch / .block_until_ready tiles — and reads device
+    time ONLY off .block_until_ready.  Compile-track spans feed the
+    compile columns."""
+    rep = _load_trace_report()
+    tracks = {1: "engine:e", 2: "compile"}
+    events = [
+        {"ph": "X", "tid": 1, "name": "decode", "ts": 0.0, "dur": 100.0,
+         "args": {"flops": 1000.0, "hlo_bytes": 400.0, "tokens": 4}},
+        {"ph": "X", "tid": 1, "name": "decode.dispatch", "ts": 0.0,
+         "dur": 40.0, "args": {"side": "host"}},
+        {"ph": "X", "tid": 1, "name": "decode.block_until_ready",
+         "ts": 40.0, "dur": 60.0, "args": {"side": "device"}},
+        {"ph": "X", "tid": 2, "name": "e.decode", "ts": 0.0, "dur": 5.0,
+         "args": {"post_warmup": False}},
+        {"ph": "X", "tid": 2, "name": "e.decode", "ts": 50.0, "dur": 5.0,
+         "args": {"post_warmup": True}},
+    ]
+    data = rep.roofline_data(events, tracks)
+    assert len(data["ops"]) == 1
+    row = data["ops"][0]
+    assert (row["engine"], row["op"]) == ("e", "decode")
+    assert row["calls"] == 1                 # parent only, not 3
+    assert row["flops"] == 1000.0            # stamped once, not tripled
+    assert row["bytes"] == 400.0
+    assert row["device_ms"] == pytest.approx(0.06)
+    assert row["compiles"] == 2 and row["post_warmup_compiles"] == 1
+    # rates are rounded to 3 decimals by the renderer
+    assert row["gflops_per_s"] == round(1000.0 / 60e-6 / 1e9, 3)
+    assert row["gbytes_per_s"] == round(400.0 / 60e-6 / 1e9, 3)
+    assert row["intensity"] == pytest.approx(2.5)
+    assert data["compiles"] == 2 and data["post_warmup_compiles"] == 1
+    # text renderer survives both populated and empty inputs
+    assert "e" in rep.roofline_text(data)
+    assert "predates" in rep.roofline_text({"ops": [], "compiles": 0,
+                                            "post_warmup_compiles": 0})
 
 
 def test_model_flops_estimate_scaling():

@@ -314,6 +314,48 @@ def test_serving_metrics_populated_by_run(engine_pair, tmp_path):
         assert name in text, name
 
 
+# ------------------------------------------------ signal-safe flushing
+
+
+def test_sigterm_mid_run_flushes_trace_artifact(tmp_path):
+    """Satellite regression: an orchestrator SIGTERM mid-run still
+    leaves a valid --trace artifact — serve.py's signal handler flushes
+    the telemetry artifacts, then re-raises the default disposition so
+    the exit status still reports the signal."""
+    import signal
+    import subprocess
+    import sys
+    import time
+
+    trace = tmp_path / "sig_trace.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--scheduler", "continuous", "--testbed", "micro",
+         "-n", "8", "--batch", "2", "--budget", "48",
+         "--admin-port", "0", "--trace", str(trace)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env=env, cwd=ROOT)
+    try:
+        # the admin banner prints right before the workload starts
+        for line in proc.stdout:
+            if "[admin] listening" in line:
+                break
+        else:
+            pytest.fail("serve exited before the admin banner: "
+                        + str(proc.wait(timeout=5)))
+        time.sleep(4.0)                      # well inside the run
+        proc.send_signal(signal.SIGTERM)
+        rc = proc.wait(timeout=120)
+    finally:
+        proc.kill()
+        proc.stdout.close()
+    assert rc == -signal.SIGTERM             # died BY the signal
+    assert trace.exists(), "SIGTERM did not flush the trace artifact"
+    doc = json.load(open(trace))
+    assert "traceEvents" in doc and isinstance(doc["traceEvents"], list)
+
+
 # -------------------------------------- sequential status regression
 
 

@@ -12,8 +12,14 @@ the endpoints while the run is live:
 4. ``/metrics`` parses as Prometheus text (every non-comment line is
    ``name{labels} float``) and exposes ``specreason_`` series
 5. ``/trace?last=50`` returns a Chrome trace-event doc
-6. after drain (the ``--admin-linger`` window) the terminal ``/metrics``
+6. ``/roofline`` serves the compile sentinel's live per-op join, and a
+   1-second ``/profile`` capture writes a profiler artifact dir
+7. after drain (the ``--admin-linger`` window) the terminal ``/metrics``
    scrape byte-matches the crash-safe ``.prom`` artifact on disk
+8. the terminal ``/status`` compile summary reports ZERO post-warmup
+   recompiles — the steady-state bucketed-engine contract
+   (serving/engine.py): a drain that keeps compiling after warmup is a
+   recompile storm, i.e. a telemetry-visible perf regression
 
 Exit 0 on success; raises / exits nonzero with context otherwise.
 Needs only the repo + jax[cpu]; run as ``python tools/admin_smoke.py``
@@ -64,6 +70,7 @@ def main() -> int:
     tmp = tempfile.mkdtemp(prefix="admin_smoke_")
     prom_path = os.path.join(tmp, "metrics.prom")
     trace_path = os.path.join(tmp, "trace.json")
+    profile_dir = os.path.join(tmp, "xla_profile")
     cmd = [
         sys.executable, "-u", "-m", "repro.launch.serve",
         "--scheduler", "continuous", "--testbed", "micro",
@@ -72,6 +79,7 @@ def main() -> int:
         "--monitor-window", "16",
         "--admin-port", "0", "--admin-linger", str(LINGER_S),
         "--metrics-out", prom_path, "--trace", trace_path,
+        "--xla-profile-dir", profile_dir,
     ]
     env = dict(os.environ,
                PYTHONPATH=os.path.join(REPO, "src"),
@@ -150,7 +158,25 @@ def main() -> int:
         print(f"[smoke] /trace ok ({len(tdoc['traceEvents'])} events)",
               flush=True)
 
-        # -- 6: terminal scrape matches the artifact ------------------
+        # -- 6: /roofline live join + a 1s /profile capture -----------
+        status, body = get(port, "/roofline")
+        assert status == 200, status
+        rdoc = json.loads(body)
+        for key in ("programs", "compiles", "post_warmup", "ops"):
+            assert key in rdoc, f"/roofline missing {key!r}: {rdoc}"
+        assert rdoc["ops"], "no per-op roofline rows in a live run"
+        print(f"[smoke] /roofline ok ({rdoc['programs']} programs, "
+              f"{len(rdoc['ops'])} ops)", flush=True)
+        status, body = get(port, "/profile?seconds=1", timeout=30.0)
+        assert status == 200, (status, body)
+        pdoc = json.loads(body)
+        assert os.path.isdir(pdoc["dir"]), pdoc
+        captured = [f for _, _, fs in os.walk(pdoc["dir"]) for f in fs]
+        assert captured, f"/profile wrote no artifact under {pdoc['dir']}"
+        print(f"[smoke] /profile ok ({pdoc['dir']}, "
+              f"{len(captured)} files)", flush=True)
+
+        # -- 7: terminal scrape matches the artifact ------------------
         assert drained.wait(DEADLINE_S), \
             "timed out waiting for the [metrics] artifact flush"
         _, final_text = get(port, "/metrics")
@@ -160,6 +186,17 @@ def main() -> int:
             "terminal /metrics scrape differs from the .prom artifact "
             f"({len(final_text)} vs {len(on_disk)} bytes)")
         print("[smoke] terminal scrape == .prom artifact", flush=True)
+
+        # -- 8: zero post-warmup recompiles in steady state -----------
+        _, body = get(port, "/status")
+        final = json.loads(body)
+        comp = final.get("compile")
+        assert comp is not None, "/status terminal snapshot lost compile"
+        assert comp["post_warmup"] == 0, (
+            f"recompile storm: {comp['post_warmup']} post-warmup "
+            f"compiles after a steady-state drain ({comp})")
+        print(f"[smoke] compile sentinel ok ({comp['programs']} programs"
+              f", 0 post-warmup recompiles)", flush=True)
 
         rc = proc.wait(timeout=DEADLINE_S)
         assert rc == 0, f"serve exited rc={rc}"

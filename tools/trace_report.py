@@ -4,7 +4,7 @@ from the serving driver into human-readable tables or one JSON doc.
   python tools/trace_report.py out.json
   python tools/trace_report.py out.json --json > report.json
 
-Four views, all from the one artifact:
+Five views, all from the one artifact:
 
 * **Waterfall** — per request, the phase timeline in submission order:
   queued / prefill chunks / speculate / verify / fallback / close /
@@ -23,14 +23,25 @@ Four views, all from the one artifact:
   enqueued) and device ms (the ``.block_until_ready`` sub-spans: the
   wait for device completion), plus the static cost annotations summed
   off the parent spans (tokens, est. KV MB moved).
+* **Roofline** — per engine call op, the compile sentinel's
+  cost-model FLOPs / bytes accessed (the ``flops`` / ``hlo_bytes``
+  annotations the sentinel stamps on every parent bracket span) joined
+  against measured device seconds (the ``.block_until_ready``
+  sub-spans): achieved GFLOP/s, GB/s and arithmetic intensity, plus
+  compile counts off the ``compile`` track (post-warmup compiles are
+  recompile-storm evidence).  Parent spans only — sub-spans tile their
+  parent, so the same exclusion rule as the attribution view applies.
+  Absent rates mean no device time was measured for that op (tracing
+  predates the compile sentinel, or the op never host-syncs, e.g.
+  ``cache_seed``).
 * **Speculation funnel** — proposed vs accepted draft tokens summed
   over every spec_round span, step-level accept/reject instants, and
   fallback regenerations: the proposed → accepted → fallback shape of
   the run.
 
-``--json`` emits all four as one machine-readable document
-(``{meta, waterfall, attribution, hostdev, funnel}``) so CI and
-scripts gate on trace contents instead of scraping stdout.
+``--json`` emits all five as one machine-readable document
+(``{meta, waterfall, attribution, hostdev, roofline, funnel}``) so CI
+and scripts gate on trace contents instead of scraping stdout.
 
 The loader *validates* before it renders — required keys per event
 type, non-negative complete-event durations, in-window timestamps, a
@@ -282,6 +293,94 @@ def hostdev_text(data: dict) -> str:
     return "\n".join(lines)
 
 
+# ------------------------------------------------------------- roofline
+def roofline_data(events: list, tracks: dict) -> dict:
+    """Achieved-rate roofline per engine call op: the compile sentinel's
+    cost-model FLOPs / bytes (``flops`` / ``hlo_bytes`` parent-span
+    annotations) over measured device seconds (``.block_until_ready``
+    sub-spans).  Sub-spans are EXCLUDED from the call/flop sums — they
+    tile their parent bracket (same rule as the attribution view), so
+    only ``.block_until_ready`` durations feed the denominator.
+    Compile counts come off the ``compile`` track."""
+    per = defaultdict(lambda: {"calls": 0, "flops": 0.0, "bytes": 0.0,
+                               "device_us": 0.0, "compiles": 0,
+                               "post_warmup_compiles": 0})
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        track = tracks.get(e["tid"], "?")
+        name = e["name"]
+        if track == "compile":
+            # span name is "<engine>.<op>"; op names never contain dots
+            engine, _, op = name.rpartition(".")
+            d = per[(engine, op)]
+            d["compiles"] += 1
+            if (e.get("args") or {}).get("post_warmup"):
+                d["post_warmup_compiles"] += 1
+            continue
+        if not track.startswith("engine:"):
+            continue
+        engine = track[len("engine:"):]
+        if name.endswith(".block_until_ready"):
+            per[(engine, name[:-len(".block_until_ready")])][
+                "device_us"] += e["dur"]
+        elif not _is_subspan(name):
+            d = per[(engine, name)]
+            d["calls"] += 1
+            args = e.get("args") or {}
+            d["flops"] += args.get("flops") or 0.0
+            d["bytes"] += args.get("hlo_bytes") or 0.0
+    ops = []
+    for (engine, op), d in sorted(per.items(),
+                                  key=lambda kv: -kv[1]["flops"]):
+        dev_s = d["device_us"] / 1e6
+        row = {
+            "engine": engine, "op": op, "calls": d["calls"],
+            "compiles": d["compiles"],
+            "post_warmup_compiles": d["post_warmup_compiles"],
+            "flops": d["flops"], "bytes": d["bytes"],
+            "device_ms": round(d["device_us"] / 1e3, 3),
+            "gflops_per_s": round(d["flops"] / dev_s / 1e9, 3)
+            if dev_s > 0 and d["flops"] > 0 else None,
+            "gbytes_per_s": round(d["bytes"] / dev_s / 1e9, 3)
+            if dev_s > 0 and d["bytes"] > 0 else None,
+            "intensity": round(d["flops"] / d["bytes"], 3)
+            if d["bytes"] > 0 else None,
+        }
+        ops.append(row)
+    return {
+        "ops": ops,
+        "compiles": sum(r["compiles"] for r in ops),
+        "post_warmup_compiles": sum(r["post_warmup_compiles"]
+                                    for r in ops),
+    }
+
+
+def roofline_text(data: dict) -> str:
+    lines = ["== roofline (cost model x measured device time) =="]
+    if not data["ops"]:
+        return "\n".join(lines + ["(no engine spans — trace predates "
+                                  "the compile sentinel)"])
+    lines.append(f"{'engine':<22} {'op':<12} {'calls':>6} {'compiles':>8} "
+                 f"{'GFLOP':>9} {'GB':>8} {'dev ms':>9} {'GFLOP/s':>9} "
+                 f"{'GB/s':>8} {'F/B':>7}")
+    for r in data["ops"]:
+        comp = str(r["compiles"])
+        if r["post_warmup_compiles"]:
+            comp += f"(+{r['post_warmup_compiles']})"
+        gf = f"{r['gflops_per_s']:.2f}" if r["gflops_per_s"] else "-"
+        gb = f"{r['gbytes_per_s']:.2f}" if r["gbytes_per_s"] else "-"
+        ai = f"{r['intensity']:.2f}" if r["intensity"] else "-"
+        lines.append(
+            f"{r['engine']:<22} {r['op']:<12} {r['calls']:>6} {comp:>8} "
+            f"{r['flops'] / 1e9:>9.3f} {r['bytes'] / 1e9:>8.3f} "
+            f"{r['device_ms']:>7.1f}ms {gf:>9} {gb:>8} {ai:>7}")
+    lines.append(f"compiles: {data['compiles']} total, "
+                 f"{data['post_warmup_compiles']} post-warmup "
+                 f"(nonzero post-warmup = recompile churn)")
+    return "\n".join(lines)
+
+
 # --------------------------------------------------------------- funnel
 def funnel_data(events: list, tracks: dict) -> dict:
     proposed = accepted = rounds = 0
@@ -337,7 +436,7 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true",
                     help="emit all views as one machine-readable JSON "
                          "doc ({meta, waterfall, attribution, hostdev, "
-                         "funnel}) instead of text tables")
+                         "roofline, funnel}) instead of text tables")
     args = ap.parse_args(argv)
     try:
         doc = load(args.trace)
@@ -362,6 +461,7 @@ def main(argv=None) -> int:
             "waterfall": waterfall_data(events, tracks),
             "attribution": attribution_data(events, tracks),
             "hostdev": hostdev_data(events, tracks),
+            "roofline": roofline_data(events, tracks),
             "funnel": funnel_data(events, tracks),
         }, indent=1))
         return 0
@@ -377,6 +477,8 @@ def main(argv=None) -> int:
     print(attribution_text(attribution_data(events, tracks)))
     print()
     print(hostdev_text(hostdev_data(events, tracks)))
+    print()
+    print(roofline_text(roofline_data(events, tracks)))
     print()
     print(funnel_text(funnel_data(events, tracks)))
     return 0
