@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import json
 import random
+import sys
 import time
 
 import jax
@@ -93,6 +94,18 @@ def main(argv=None):
                     help="Poisson req/s (0 = burst at t=0)")
     ap.add_argument("--concurrency", type=int, nargs="+", default=[1, 4, 8])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=0, metavar="N",
+                    help="also bench the continuous scheduler sharded "
+                         "tensor-parallel N-way vs unsharded at the "
+                         "highest swept concurrency (needs >= N devices; "
+                         "on CPU force them with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--tp-gate", type=float, default=0.0, metavar="R",
+                    help="exit nonzero unless tp/unsharded req/s ratio "
+                         ">= R (CI uses 0.9: CPU collectives on the "
+                         "exact-TP all-gathers cost a little; the arm "
+                         "guards against pathological slowdowns, the "
+                         "equivalence SUITE guards correctness)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
     if args.num_requests < 1 or args.reps < 1:
@@ -125,6 +138,30 @@ def main(argv=None):
               f"{cont['tok_s']:8.1f} tok/s  p95 "
               f"{cont['p95_latency_s']:.3f}s  speedup {speedup:4.1f}x")
 
+    tp_section = None
+    if args.tp > 1:
+        # TP arm: same workload, highest swept concurrency, sharded vs
+        # unsharded continuous scheduler.  Token equivalence is the
+        # test suite's job (tests/test_tp_serving.py); here the ratio
+        # guards the serving-side overhead of the exact-TP collectives.
+        conc = max(args.concurrency)
+
+        def make_tp(c=conc, tp=args.tp):
+            kv = KVManager(base_cfg, small_cfg,
+                           KVBudget(total_bytes=1 << 26))
+            return ContinuousScheduler(ctrl, kv, max_batch=c,
+                                       context_capacity=128, tp_size=tp)
+        sharded = _bench(make_tp, pairs, arrivals, args.reps)
+        tp1 = rows[str(conc)]["continuous"]
+        ratio = sharded["req_s"] / tp1["req_s"] if tp1["req_s"] else 0.0
+        tp_section = {"tp_size": args.tp, "concurrency": conc,
+                      "sharded": sharded, "unsharded": tp1,
+                      "ratio": round(ratio, 3)}
+        print(f"tp={args.tp} c={conc:<4d}{sharded['req_s']:7.2f} req/s  "
+              f"{sharded['tok_s']:8.1f} tok/s  p95 "
+              f"{sharded['p95_latency_s']:.3f}s  ratio vs tp=1 "
+              f"{ratio:4.2f}x")
+
     out = {
         "bench": "serving",
         "schema": 1,
@@ -135,6 +172,7 @@ def main(argv=None):
         "arrival_rate": args.arrival_rate,
         "backend": jax.default_backend(),
         "concurrency": rows,
+        "tp": tp_section,
         # headline: the batching win at the highest swept concurrency
         "speedup": rows[str(max(args.concurrency))]["speedup"],
     }
@@ -142,6 +180,11 @@ def main(argv=None):
         json.dump(out, f, indent=1)
     print(f"wrote {args.out} (continuous-batching speedup "
           f"{out['speedup']:.1f}x at c={max(args.concurrency)})")
+    if tp_section is not None and args.tp_gate > 0.0 \
+            and tp_section["ratio"] < args.tp_gate:
+        print(f"TP GATE FAILED: tp={args.tp} req/s ratio "
+              f"{tp_section['ratio']:.3f} < {args.tp_gate}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

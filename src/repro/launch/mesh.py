@@ -31,6 +31,21 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
     return jax.make_mesh(shape, axes)
 
 
+def make_tp_mesh(tp_size: int, devices=None, axis: str = "model"):
+    """1-D ``(axis,)`` mesh over the first ``tp_size`` devices — the
+    serving stack's tensor-parallel mesh (``serving/tp.py`` builds its
+    TPContext on it; the same ``model`` axis name the param/activation
+    rule sets already target)."""
+    if tp_size < 1:
+        raise ValueError(f"tp_size must be >= 1, got {tp_size}")
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) < tp_size:
+        raise ValueError(
+            f"tp_size={tp_size} needs {tp_size} devices, "
+            f"have {len(devices)}")
+    return jax.make_mesh((tp_size,), (axis,), devices=devices[:tp_size])
+
+
 def param_rules(mode: str = "tp") -> Dict[str, Any]:
     """Parameter sharding rule set.
 

@@ -340,7 +340,8 @@ def serve_continuous(args, base, small, reqs, fused: bool) -> None:
                                 monitors=monitors, status_board=board,
                                 on_tick=on_tick,
                                 compile_watch=compile_watch,
-                                memory_watch=memory_watch)
+                                memory_watch=memory_watch,
+                                tp_size=args.tp)
     admin = None
     if admin_on:
         admin = AdminServer(board=board, metrics=metrics, tracer=tracer,
@@ -511,6 +512,15 @@ def main(argv=None):
                          "admission")
     ap.add_argument("--batch", type=int, default=8,
                     help="continuous scheduler: max concurrent rows")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="continuous scheduler: tensor-parallel degree — "
+                         "shard both engines, their KV state and the "
+                         "page stores over an N-device ('model',) mesh "
+                         "(bit-exact vs --tp 1: outputs are "
+                         "token-identical per request; N must divide "
+                         "both models' heads AND kv-heads; on CPU use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 to fake devices)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = burst at t=0)")
     ap.add_argument("--kv-budget-mb", type=int, default=64,
@@ -671,6 +681,11 @@ def main(argv=None):
     if args.scheduler == "continuous" and args.scheme != "specreason":
         ap.error("--scheduler continuous serves the specreason scheme "
                  "only; drop --scheme or use the sequential scheduler")
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    if args.tp > 1 and args.scheduler != "continuous":
+        ap.error("--tp rides on the continuous scheduler (the sharded "
+                 "BatchEngine pair); add --scheduler continuous")
     if args.spec_decode and args.scheduler != "continuous":
         ap.error("--spec-decode rides on the continuous scheduler; add "
                  "--scheduler continuous (the sequential regime's "

@@ -54,6 +54,13 @@ def qkv(x: jax.Array, p: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array, ja
 
 
 def out_proj(o: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    # "act_out_heads" is the heads dim at the contraction boundary: the
+    # default rules keep it on the model axis (partial-sum dot + psum, the
+    # cheap baseline), the exact-TP serving rules map it to None — forcing
+    # the all-gather BEFORE the contraction so the dot runs replicated with
+    # the same reduction order as a single device (bitwise-identical
+    # logits; see DESIGN.md §Sharded serving).
+    o = constrain(o, ("act_batch", None, "act_out_heads", None))
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 
 

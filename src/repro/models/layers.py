@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .sharding import constrain
+
 Pytree = Any
 
 # Default logical-axis -> mesh-axis rules (baseline tensor parallelism).
@@ -56,6 +58,17 @@ DEFAULT_RULES: Dict[str, Any] = {
 # FSDP variant: additionally shard the replicated "embed" dim of weights over
 # the data axis (ZeRO-3-like; XLA inserts all-gathers at use sites).
 FSDP_RULES = dict(DEFAULT_RULES, embed="data")
+
+# Exact-TP variant (sharded serving): shard ONLY the output dims of the
+# first GEMM of each pair (q/k/v heads, ffn hidden) and keep every
+# contraction operand replicated — including the unembed, so sampling sees
+# replicated logits.  Combined with models.sharding.exact_tp_activation_rules
+# this makes a TP>1 forward bitwise-identical to TP=1 (the serving
+# equivalence gate, tests/test_tp_serving.py).  Engines must check that
+# tp divides n_heads/n_kv_heads: the head_dim FALLBACK would shard a
+# contraction dim and break exactness.
+EXACT_TP_RULES = dict(DEFAULT_RULES, vocab=None, experts=None,
+                      ssm_inner=None, ssm_heads=None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,14 +278,25 @@ def mlp_spec(d: int, ff: int, act: str) -> Dict[str, ParamSpec]:
     }
 
 
+def _constrain_hidden(h: jax.Array) -> jax.Array:
+    # "act_mlp_hidden" is the ffn hidden dim at the down-projection
+    # contraction boundary: default rules keep it sharded on the model
+    # axis (partial-sum dot), the exact-TP serving rules map it to None so
+    # the hidden is all-gathered first and the down-proj dot runs with a
+    # single-device reduction order (bitwise-identical activations).
+    axes = ("act_batch",) + (None,) * (h.ndim - 2) + ("act_mlp_hidden",)
+    return constrain(h, axes)
+
+
 def apply_mlp(x: jax.Array, p: Dict[str, jax.Array], act: str) -> jax.Array:
     if act == "swiglu":
         g = jnp.einsum("...d,df->...f", x, p["w_gate"])
         u = jnp.einsum("...d,df->...f", x, p["w_up"])
-        h = jax.nn.silu(g) * u
+        h = _constrain_hidden(jax.nn.silu(g) * u)
         return jnp.einsum("...f,fd->...d", h, p["w_down"])
     h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_in"]) + p["b_in"])
-    return jnp.einsum("...f,fd->...d", h, p["w_out"]) + p["b_out"]
+    return jnp.einsum("...f,fd->...d", _constrain_hidden(h),
+                      p["w_out"]) + p["b_out"]
 
 
 # -- embeddings ----------------------------------------------------------------

@@ -36,7 +36,36 @@ def default_activation_rules(data_axes=("data",), model_axis="model",
         # flash-decode mode (when kv heads don't divide the model axis),
         # None otherwise — set per-shape by the launcher.
         "act_cache_seq": None,
+        # contraction-boundary dims (attention heads entering out_proj,
+        # ffn hidden entering the down-projection): kept sharded here
+        # (partial-sum dot + psum, the cheap baseline); the exact-TP
+        # serving rules map them to None to force the all-gather BEFORE
+        # the contraction (bitwise-identical to single-device).
+        "act_out_heads": model_axis,
+        "act_mlp_hidden": model_axis,
     }
+
+
+def exact_tp_activation_rules(model_axis: str = "model") -> Dict[str, Any]:
+    """Activation rules for BIT-EXACT tensor-parallel serving.
+
+    Only *output* (non-contraction) dims stay sharded: attention math runs
+    per-kv-head on the model axis and the ffn hidden is computed sharded,
+    but every tensor entering a contraction (`act_out_heads`,
+    `act_mlp_hidden`) is constrained replicated first.  A column slice of
+    a dot is computed with the same reduction order as the unsharded dot,
+    and an all-gather moves bits without arithmetic — so every device
+    holds bitwise the TP=1 activations at layer boundaries, which is what
+    lets TP>1 serving claim *token identity* (not just tolerance) against
+    the single-device path (DESIGN.md §Sharded serving).  The price is an
+    all-gather + replicated second GEMM per block instead of Megatron's
+    row-parallel psum — the documented exactness/efficiency trade."""
+    rules = default_activation_rules(data_axes=(), model_axis=model_axis,
+                                     shard_batch=False)
+    rules["act_out_heads"] = None     # gather heads before out_proj
+    rules["act_mlp_hidden"] = None    # gather hidden before down-proj
+    rules["act_vocab"] = None         # logits replicated (exact sampling)
+    return rules
 
 
 @contextlib.contextmanager

@@ -74,6 +74,9 @@ class SchedulerSnapshot:
     # MemoryWatch.sample() and CompileWatch.as_dict() of the tick
     memory: Optional[Dict[str, Any]] = None
     compile: Optional[Dict[str, Any]] = None
+    # tensor-parallel plane: mesh axes / tp_size / devices / per-device
+    # memory watermarks (None when serving unsharded)
+    mesh: Optional[Dict[str, Any]] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {
@@ -88,6 +91,7 @@ class SchedulerSnapshot:
             "monitors": self.monitors,
             "memory": self.memory,
             "compile": self.compile,
+            "mesh": self.mesh,
         }
 
 

@@ -34,6 +34,7 @@ for these rows lives in ``serving.paged_kv`` (the scheduler owns it).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -46,6 +47,7 @@ from ..models.model import Model
 from ..sampling.sample import SamplingParams, probs_from_logits, sample
 from .engine import DEFAULT_BUCKETS, Meter, _STOP_SLOTS
 from .telemetry import Tracer, engine_track
+from .tp import TPContext
 
 
 @dataclasses.dataclass
@@ -74,7 +76,7 @@ class BatchEngine:
                  capacity: int = 1024,
                  buckets: Sequence[int] = DEFAULT_BUCKETS, name: str = "",
                  pad_id: int = 0, tracer: Optional[Tracer] = None,
-                 compile_watch=None):
+                 compile_watch=None, tp: Optional[TPContext] = None):
         if model.cfg.has_ssm:
             raise ValueError(
                 "BatchEngine is attention-only: ragged batched rows rely on "
@@ -82,6 +84,15 @@ class BatchEngine:
                 "pads.  Serve ssm/hybrid models through the sequential "
                 "Engine.")
         self.model = model
+        # tensor parallelism (serving/tp.py): params committed onto the
+        # mesh under EXACT_TP_RULES, KV state sharded on kv-heads, every
+        # dispatch traced under the mesh + exact-TP activation rules.
+        # None (default) keeps the single-device path bit-identical —
+        # and so does TP itself (the whole point; see TPContext).
+        self.tp = tp
+        if tp is not None:
+            tp.check_model(model.cfg)
+            params = tp.shard_params(model, params)
         self.params = params
         self.batch = batch
         self.capacity = capacity
@@ -104,8 +115,9 @@ class BatchEngine:
         self.compile_watch = compile_watch
         self._last_cost: Optional[dict] = None
         state = model.init_state(batch, capacity)
-        self.state = dataclasses.replace(
+        state = dataclasses.replace(
             state, pos=jnp.zeros((batch,), jnp.int32))
+        self.state = state if tp is None else tp.shard_state(state)
         # static per-token KV footprint (bytes across k+v, all layers) —
         # the cost annotation on engine-call bracket spans (est. KV bytes
         # moved); zero for cache-less models
@@ -193,9 +205,17 @@ class BatchEngine:
         raise ValueError(f"extend of {n} tokens exceeds bucket max "
                          f"{self.buckets[-1]}")
 
+    def _put(self, x, dtype=None) -> jax.Array:
+        """Host->device staging: committed replicated on the TP mesh (a
+        jit call must not mix mesh-committed params with default-device
+        operands), plain ``jnp.asarray`` otherwise."""
+        if self.tp is None:
+            return jnp.asarray(x, dtype)
+        return self.tp.put(x, dtype)
+
     def _sync_pos(self) -> None:
         self.state = dataclasses.replace(
-            self.state, pos=jnp.asarray(self.pos, jnp.int32))
+            self.state, pos=self._put(self.pos, jnp.int32))
 
     def _dispatch(self, op: str, fn: Callable, *args):
         """Run one jitted engine call, wrapped in a
@@ -204,15 +224,21 @@ class BatchEngine:
         compile watch attached, the call's abstract signature is recorded
         first (a first-seen signature is a compile event) and its
         cost-model FLOPs/bytes are held in ``_last_cost`` for the
-        matching ``_bracket`` to stamp onto the parent span."""
-        cw = self.compile_watch
-        if cw is not None:
-            self._last_cost = cw.observe(self.name, op, fn, args)
-        tr = self.tracer
-        if tr is not None and tr.annotate:
-            with jax.profiler.TraceAnnotation(f"{self.name}.{op}"):
-                return fn(*args)
-        return fn(*args)
+        matching ``_bracket`` to stamp onto the parent span.  Under TP
+        the whole body — the watch's lowering twin included — runs inside
+        the mesh + exact-TP activation-rules context, so ``constrain``'s
+        bare PartitionSpecs resolve and tracing matches execution."""
+        tp_ctx = self.tp.context() if self.tp is not None \
+            else contextlib.nullcontext()
+        with tp_ctx:
+            cw = self.compile_watch
+            if cw is not None:
+                self._last_cost = cw.observe(self.name, op, fn, args)
+            tr = self.tracer
+            if tr is not None and tr.annotate:
+                with jax.profiler.TraceAnnotation(f"{self.name}.{op}"):
+                    return fn(*args)
+            return fn(*args)
 
     def _bracket(self, op: str, t0: float, td: float, t1: float,
                  args: dict) -> None:
@@ -310,7 +336,7 @@ class BatchEngine:
         self._sync_pos()
         t0 = time.perf_counter()
         logits, new_state = self._dispatch(op, fn, self.params,
-                                           jnp.asarray(toks), self.state)
+                                           self._put(toks), self.state)
         td = time.perf_counter()                   # dispatch returned
         logits = jax.block_until_ready(logits)     # the ONE host sync
         t1 = time.perf_counter()
@@ -526,8 +552,8 @@ class BatchEngine:
         stop = sorted(set(int(s) for s in stop_ids))
         n_slots = max(_STOP_SLOTS,
                       -(-len(stop) // _STOP_SLOTS) * _STOP_SLOTS)
-        stop_arr = jnp.asarray(stop + [-1] * (n_slots - len(stop)),
-                               jnp.int32)
+        stop_arr = self._put(stop + [-1] * (n_slots - len(stop)),
+                             jnp.int32)
         stop_mask = np.zeros((self.batch, n_slots), bool)
         for i, r in enumerate(rows):
             allowed = set(int(s) for s in stop_ids_rows[i]) \
@@ -547,9 +573,9 @@ class BatchEngine:
         t0 = time.perf_counter()
         toks, n, logits, new_state, probs = self._dispatch(
             "decode", fn,
-            self.params, self.state, jnp.asarray(self.last_logits),
-            jnp.asarray(key_mat), stop_arr, jnp.asarray(stop_mask),
-            jnp.asarray(n_max), jnp.asarray(greedy))
+            self.params, self.state, self._put(self.last_logits),
+            self._put(key_mat), stop_arr, self._put(stop_mask),
+            self._put(n_max), self._put(greedy))
         td = time.perf_counter()                        # dispatch returned
         toks = np.asarray(jax.block_until_ready(toks))  # the ONE host sync
         n = np.asarray(n)
@@ -688,8 +714,8 @@ class BatchEngine:
         t0 = time.perf_counter()
         k, v = self._dispatch("cache_seed", fn,
                               self.state.k, self.state.v, k_pages, v_pages,
-                              jnp.asarray(slot_mat),
-                              jnp.asarray(list(rows), jnp.int32))
+                              self._put(slot_mat),
+                              self._put(list(rows), jnp.int32))
         self.state = dataclasses.replace(self.state, k=k, v=v)
         for row, slots in zip(rows, slot_lists):
             self.pos[row] = len(slots) * bs
@@ -775,8 +801,8 @@ class BatchEngine:
         t0 = time.perf_counter()
         logits, new_state = self._dispatch("feed", fn,
                                            self.params, self.state,
-                                           jnp.asarray(toks),
-                                           jnp.asarray(active))
+                                           self._put(toks),
+                                           self._put(active))
         td = time.perf_counter()                   # dispatch returned
         logits = jax.block_until_ready(logits)     # the ONE host sync
         t1 = time.perf_counter()

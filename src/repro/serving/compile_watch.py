@@ -307,6 +307,48 @@ class MemoryWatch:
         self.model_bytes = 0
         self.pool_bytes: Dict[str, int] = {}
         self.peak_bytes = 0
+        # per-device high watermarks (str(device) -> bytes) maintained by
+        # ``per_device`` — the /status ``mesh.watermarks`` source when
+        # serving is sharded over more devices than ``self.device``
+        self._device_peaks: Dict[str, int] = {}
+
+    def per_device(self, devices=None) -> List[Dict[str, Any]]:
+        """Sample memory stats for EVERY given device (default: all
+        ``jax.devices()``), maintaining a per-device high watermark.  On
+        backends without allocator stats (CPU) ``bytes_in_use`` is None
+        and the watermark falls back to the accounted total — each shard
+        holds 1/tp of every sharded array, so the replicated-array bias
+        makes this an upper bound per device."""
+        if devices is None:
+            try:
+                devices = jax.devices()
+            except Exception:
+                devices = []
+        out: List[Dict[str, Any]] = []
+        accounted = self.model_bytes + sum(self.pool_bytes.values())
+        for d in devices:
+            try:
+                stats = d.memory_stats()
+            except Exception:
+                stats = None
+            stats = stats or {}
+            in_use = stats.get("bytes_in_use")
+            in_use = int(in_use) if in_use is not None else None
+            peak = stats.get("peak_bytes_in_use")
+            key = str(d)
+            seen = in_use if in_use is not None else \
+                accounted // max(len(devices), 1)
+            if peak is not None:
+                seen = max(seen, int(peak))
+            self._device_peaks[key] = max(
+                self._device_peaks.get(key, 0), seen)
+            out.append({
+                "device": key,
+                "platform": getattr(d, "platform", None),
+                "bytes_in_use": in_use,
+                "peak_bytes": self._device_peaks[key],
+            })
+        return out
 
     def note_model(self, nbytes: int) -> None:
         self.model_bytes += int(nbytes)

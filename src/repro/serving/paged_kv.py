@@ -54,11 +54,21 @@ class PagedKVPool:
     is ``PagedKVStore``).  Refcounts > 1 mean the block is shared between a
     live sequence and one or more snapshots (or a shared prefix)."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 tp_size: int = 1):
         if num_blocks <= 0 or block_size <= 0:
             raise ValueError("num_blocks and block_size must be positive")
+        if tp_size < 1:
+            raise ValueError("tp_size must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # tensor-parallel degree of the physical stores this pool
+        # accounts for — METADATA ONLY.  A block id addresses the same
+        # page on every device (pages shard on the kv-heads dim, not the
+        # block dim), so refcounts, the free list and every CoW decision
+        # are tp-invariant by construction; tests/test_tp_pool_props.py
+        # property-tests that no accounting path ever branches on this.
+        self.tp_size = tp_size
         # LIFO free-list: reuse hot blocks first
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._ref = np.zeros(num_blocks, np.int32)
@@ -291,18 +301,51 @@ class PagedKVStore:
     against the dense engine bit-for-bit (tests/test_paged_kv.py)."""
 
     def __init__(self, pool: PagedKVPool, n_layers: int, kv_heads: int,
-                 head_dim: int, dtype=jnp.float32):
+                 head_dim: int, dtype=jnp.float32, tp=None):
         self.pool = pool
+        self.kv_heads = kv_heads
+        # tensor parallelism: pages shard on the kv-heads dim (axis 2) —
+        # each device holds every page's local head slice, so block ids
+        # (and the replicated host-side block tables) mean the same thing
+        # on every shard and the pool accounting never changes.  ``tp``
+        # is a serving.tp.TPContext or None.
+        self.tp = tp
+        if tp is not None and kv_heads % tp.tp_size != 0:
+            raise ValueError(
+                f"tp_size={tp.tp_size} must divide kv_heads={kv_heads}")
         shape = (n_layers, pool.num_blocks, kv_heads, pool.block_size,
                  head_dim)
-        self.k_pages = jnp.zeros(shape, dtype)
-        self.v_pages = jnp.zeros(shape, dtype)
+        self.k_pages = self._commit(jnp.zeros(shape, dtype))
+        self.v_pages = self._commit(jnp.zeros(shape, dtype))
+
+    def _commit(self, pages: jax.Array) -> jax.Array:
+        """Pin pages to their mesh placement (kv-heads sharded).  Applied
+        after every mutation so the arrays' sharding stays stable —
+        drifting shardings would retrace every consumer jit."""
+        if self.tp is None:
+            return pages
+        return self.tp.shard_pages(pages, kv_axis=2)
+
+    def device_views(self) -> List[Dict[str, object]]:
+        """Per-device page views: which contiguous kv-head slice of the
+        pool each mesh device holds (observability + tests; block tables
+        are replicated host state and carry no per-device variant)."""
+        if self.tp is None:
+            return [{"device": None, "kv_head_start": 0,
+                     "kv_heads": self.kv_heads}]
+        local = self.kv_heads // self.tp.tp_size
+        return [{"device": str(d), "kv_head_start": i * local,
+                 "kv_heads": local}
+                for i, d in enumerate(self.tp.mesh.devices.flat)]
 
     def apply_copies(self, copies: Sequence[Tuple[int, int]]) -> None:
         """Execute the (src, dst) page copies a CoW append emitted."""
         for src, dst in copies:
             self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
             self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+        if copies:
+            self.k_pages = self._commit(self.k_pages)
+            self.v_pages = self._commit(self.v_pages)
 
     def scatter(self, seq: PagedSeq, k_new: jax.Array, v_new: jax.Array,
                 start: int) -> None:
@@ -318,6 +361,9 @@ class PagedKVStore:
                 k_new[:, i].astype(self.k_pages.dtype))
             self.v_pages = self.v_pages.at[:, page, :, slot].set(
                 v_new[:, i].astype(self.v_pages.dtype))
+        if n:
+            self.k_pages = self._commit(self.k_pages)
+            self.v_pages = self._commit(self.v_pages)
 
     def gather(self, seq: PagedSeq, layer: int) -> Tuple[jax.Array, jax.Array]:
         """Dense (length, kv, hd) caches for one layer of one sequence."""

@@ -81,15 +81,33 @@ class PrefixKVStore:
     engine exports and imports."""
 
     def __init__(self, n_slots: int, n_layers: int, kv_heads: int,
-                 head_dim: int, block_size: int, dtype=jnp.float32):
+                 head_dim: int, block_size: int, dtype=jnp.float32,
+                 tp=None):
         if n_slots <= 0:
             raise ValueError("PrefixKVStore needs at least one slot")
         self.n_slots = n_slots
         self.block_size = block_size
+        # tensor parallelism (serving.tp.TPContext or None): pages shard
+        # on the kv-heads dim (axis 3 in this token-major layout) so a
+        # cached prefix's local head slice lives next to the engine shard
+        # that will consume it; slot accounting stays replicated host
+        # state, same as the pool's block tables.
+        self.tp = tp
+        if tp is not None and kv_heads % tp.tp_size != 0:
+            raise ValueError(
+                f"tp_size={tp.tp_size} must divide kv_heads={kv_heads}")
         shape = (n_layers, n_slots, block_size, kv_heads, head_dim)
-        self.k_pages = jnp.zeros(shape, dtype)
-        self.v_pages = jnp.zeros(shape, dtype)
+        self.k_pages = self._commit(jnp.zeros(shape, dtype))
+        self.v_pages = self._commit(jnp.zeros(shape, dtype))
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
+
+    def _commit(self, pages: jax.Array) -> jax.Array:
+        """Pin pages to their mesh placement (kv-heads sharded) after
+        every mutation — a drifting sharding would retrace the batch
+        engine's fused import jit on every cache hit."""
+        if self.tp is None:
+            return pages
+        return self.tp.shard_pages(pages, kv_axis=3)
 
     @property
     def free_slots(self) -> int:
@@ -111,10 +129,10 @@ class PrefixKVStore:
         idx = jnp.asarray(list(slots), jnp.int32)
         kb = k.reshape(k.shape[0], ns, bs, *k.shape[2:])
         vb = v.reshape(v.shape[0], ns, bs, *v.shape[2:])
-        self.k_pages = self.k_pages.at[:, idx].set(
-            kb.astype(self.k_pages.dtype))
-        self.v_pages = self.v_pages.at[:, idx].set(
-            vb.astype(self.v_pages.dtype))
+        self.k_pages = self._commit(self.k_pages.at[:, idx].set(
+            kb.astype(self.k_pages.dtype)))
+        self.v_pages = self._commit(self.v_pages.at[:, idx].set(
+            vb.astype(self.v_pages.dtype)))
 
     def read(self, slots: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
         """Dense ``(L, len(slots)*block_size, kv, hd)`` KV for a cached

@@ -116,6 +116,7 @@ from .resilience import (STATUS_FAILED, STATUS_OK, STATUS_SHED,
                          OverloadController, RequestError, ResilienceConfig,
                          TickConfig)
 from .spec_engine import BatchSpecEngine, SpecLedger, SpecRow
+from .tp import TPContext
 from .telemetry import (TRACK_SCHED, SchedEvent, ServingMetrics, Tracer,
                         request_track)
 
@@ -450,7 +451,8 @@ class ContinuousScheduler:
                  on_tick: Optional[Callable[[SchedulerSnapshot],
                                             None]] = None,
                  compile_watch=None,
-                 memory_watch=None):
+                 memory_watch=None,
+                 tp_size: int = 1):
         cfg = controller.cfg
         if cfg.overlapped:
             raise NotImplementedError(
@@ -493,25 +495,35 @@ class ContinuousScheduler:
             compile_watch.monitors = monitors
         self.memory_watch = memory_watch
         self.last_memory: Optional[Dict[str, object]] = None
+        # tensor parallelism: ONE TPContext shared by both engines and
+        # every page store (serving/tp.py — a split pair would mix arrays
+        # committed to different device sets inside one spec round).
+        # tp_size=1 keeps the exact single-device path: no mesh, no
+        # placement, no rule context.
+        if tp_size < 1:
+            raise ValueError(f"tp_size must be >= 1, got {tp_size}")
+        self.tp = TPContext.build(tp_size) if tp_size > 1 else None
         self.base_be = BatchEngine(controller.base.model,
                                    controller.base.params, max_batch,
                                    engine_capacity,
                                    name=f"cb-{controller.base.name}",
                                    tracer=tracer,
-                                   compile_watch=compile_watch)
+                                   compile_watch=compile_watch,
+                                   tp=self.tp)
         self.small_be = BatchEngine(controller.small.model,
                                     controller.small.params, max_batch,
                                     engine_capacity,
                                     name=f"cb-{controller.small.name}",
                                     tracer=tracer,
-                                    compile_watch=compile_watch)
+                                    compile_watch=compile_watch,
+                                    tp=self.tp)
         self.spec_be = BatchSpecEngine(self.base_be, self.small_be,
                                        self.gamma) if self.spec else None
         self.pools = {
             "base": PagedKVPool(max(kv.capacity_blocks("base"), 1),
-                                kv.block_size),
+                                kv.block_size, tp_size=tp_size),
             "small": PagedKVPool(max(kv.capacity_blocks("small"), 1),
-                                 kv.block_size),
+                                 kv.block_size, tp_size=tp_size),
         }
         # Radix prefix cache per engine: shared prompt prefixes (templates,
         # best-of-N samples, preempted-and-readmitted requests) resolve to
@@ -529,7 +541,7 @@ class ContinuousScheduler:
                     else kv.prefix_cache_blocks(which)
                 slots = max(1, min(slots, self.pools[which].num_blocks))
                 store = PrefixKVStore(slots, ll, kh, hd, kv.block_size,
-                                      dtype=be.state.k.dtype)
+                                      dtype=be.state.k.dtype, tp=self.tp)
                 self.caches[which] = RadixCache(self.pools[which], store,
                                                 meter=be.meter)
         if max_prefill_tokens < 1:
@@ -1771,7 +1783,20 @@ class ContinuousScheduler:
             memory=dict(self.last_memory)
             if self.last_memory is not None else None,
             compile=self.compile_watch.as_dict()
-            if self.compile_watch is not None else None)
+            if self.compile_watch is not None else None,
+            mesh=self._mesh_section())
+
+    def _mesh_section(self) -> Optional[Dict[str, object]]:
+        """The snapshot's ``mesh`` block: axes/tp_size/devices plus — when
+        a memory watch is attached — the per-device memory watermarks
+        over the mesh's device set.  None when serving unsharded."""
+        if self.tp is None:
+            return None
+        section = self.tp.describe()
+        if self.memory_watch is not None:
+            section["watermarks"] = self.memory_watch.per_device(
+                list(self.tp.mesh.devices.flat))
+        return section
 
     def resilience_stats(self) -> Dict[str, object]:
         """The run's failure-lifecycle and overload-control counters

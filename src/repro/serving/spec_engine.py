@@ -117,9 +117,22 @@ class BatchSpecEngine:
                  gamma: int = 4):
         if gamma < 1:
             raise ValueError("gamma must be >= 1")
+        if base_be.tp is not draft_be.tp:
+            # one mesh for the whole spec round: a draft proposal feeding
+            # a base verification must not hop between device sets (and a
+            # half-sharded pair would silently break the per-row
+            # bit-identity contract against the sequential routine)
+            raise ValueError(
+                "base and draft engines must share one TPContext "
+                "(both None, or the same object)")
         self.base_be = base_be
         self.draft_be = draft_be
         self.gamma = gamma
+
+    @property
+    def tp_size(self) -> int:
+        """Tensor-parallel degree of the engine pair (1 = unsharded)."""
+        return 1 if self.base_be.tp is None else self.base_be.tp.tp_size
 
     def decode_rows(self, items: Sequence[SpecRow], params: SamplingParams,
                     ledger: Optional[SpecLedger] = None,

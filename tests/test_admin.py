@@ -37,11 +37,11 @@ SMALL_CFG = ModelConfig(name="ts", family="dense", n_layers=1, d_model=32,
                         vocab_size=tk.VOCAB_SIZE).validate()
 
 
-def _get(port, path):
+def _get(port, path, timeout=5.0):
     """GET -> (status, body_text); 4xx bodies are returned, not raised."""
     try:
         with urllib.request.urlopen(
-                f"http://127.0.0.1:{port}{path}", timeout=5.0) as r:
+                f"http://127.0.0.1:{port}{path}", timeout=timeout) as r:
             return r.status, r.read().decode()
     except urllib.error.HTTPError as e:
         return e.code, e.read().decode()
@@ -203,7 +203,10 @@ def test_status_carries_compile_summary(served):
 def test_profile_endpoint_captures_and_latches(served, tmp_path):
     import os
     port = served["admin"].port
-    status, body = _get(port, "/profile?seconds=0.05")
+    # generous HTTP timeout: profiler start/stop walks every device of
+    # the forced 8-device CPU platform (tests/conftest.py) and can take
+    # well over the default 5s on a loaded suite run
+    status, body = _get(port, "/profile?seconds=0.05", timeout=60.0)
     assert status == 200
     doc = json.loads(body)
     assert os.path.isdir(doc["dir"]) and doc["capture"] == 0
@@ -214,7 +217,7 @@ def test_profile_endpoint_captures_and_latches(served, tmp_path):
     # a held latch maps to 409, not a hang
     assert served["profiler"]._lock.acquire(blocking=False)
     try:
-        status, body = _get(port, "/profile?seconds=0.05")
+        status, body = _get(port, "/profile?seconds=0.05", timeout=60.0)
         assert status == 409
     finally:
         served["profiler"]._lock.release()
@@ -265,3 +268,43 @@ def test_tracer_chrome_trace_last_slicing():
     assert tail == full[-3:]
     assert [e for e in tr.chrome_trace(last=0)["traceEvents"]
             if e.get("ph") != "M"] == []
+
+
+def test_status_mesh_section_for_sharded_run():
+    """A tp_size=2 scheduler publishes a ``mesh`` section in /status:
+    mesh axes, tp degree, device list and per-device memory watermarks
+    (MemoryWatch.per_device — accounted-bytes fallback on CPU, where the
+    allocator exposes no stats)."""
+    from repro.serving.compile_watch import MemoryWatch
+
+    bm, sm = Model(BASE_CFG), Model(SMALL_CFG)
+    base = Engine(bm, bm.init(jax.random.PRNGKey(0)), max_len=256)
+    small = Engine(sm, sm.init(jax.random.PRNGKey(1)), max_len=256)
+    ctrl = SpecReason(base, small, SpecReasonConfig(
+        policy=StaticThreshold(5.0), token_budget=16, max_steps=2,
+        sampling=SamplingParams(temperature=0.0)))
+    kv = KVManager(BASE_CFG, SMALL_CFG, KVBudget(total_bytes=1 << 26))
+    board = StatusBoard()
+    cs = ContinuousScheduler(ctrl, kv, max_batch=2, context_capacity=128,
+                             status_board=board,
+                             memory_watch=MemoryWatch(), tp_size=2)
+    cs.submit(tasks.sample_task(random.Random(0)),
+              key=jax.random.PRNGKey(0))
+    cs.drain(jax.random.PRNGKey(1))
+    admin = AdminServer(board=board).start()
+    try:
+        status, body = _get(admin.port, "/status")
+        assert status == 200
+        doc = json.loads(body)
+        mesh = doc["mesh"]
+        assert mesh is not None
+        assert mesh["tp_size"] == 2
+        assert mesh["axes"] == {"model": 2}
+        assert len(mesh["devices"]) == 2
+        marks = mesh["watermarks"]
+        assert len(marks) == 2
+        for m in marks:
+            assert m["platform"] == "cpu"
+            assert m["peak_bytes"] >= 0      # accounted fallback on CPU
+    finally:
+        admin.stop()

@@ -1,7 +1,9 @@
 """Distribution tests: divisibility-aware partition specs, and an
 end-to-end 8-device CPU pjit run whose sharded forward matches the
-single-device forward (run in a subprocess so the forced device count never
-leaks into other tests)."""
+single-device forward.  The forced device count comes from
+tests/conftest.py (set before backend init, restored at session end);
+the pjit run stays in a subprocess only to keep its XLA compilations
+out of this process's caches."""
 
 import subprocess
 import sys
@@ -75,8 +77,6 @@ def test_full_arch_specs_all_divisible(arch):
 
 
 SUBPROCESS_PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.models.config import ModelConfig
@@ -110,10 +110,10 @@ SUBPROCESS_PROG = textwrap.dedent("""
 """)
 
 
-def test_sharded_forward_matches_single_device():
+def test_sharded_forward_matches_single_device(forced_xla_env):
+    # forced device count comes from the conftest fixture's env (save/
+    # restore handled there) — no raw os.environ mutation in the child
     r = subprocess.run([sys.executable, "-c", SUBPROCESS_PROG],
                        capture_output=True, text=True, timeout=600,
-                       env={**__import__("os").environ,
-                            "PYTHONPATH": "src"},
-                       cwd="/root/repo")
+                       env=forced_xla_env, cwd="/root/repo")
     assert "SHARDED_OK" in r.stdout, r.stdout + r.stderr

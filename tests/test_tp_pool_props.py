@@ -1,0 +1,141 @@
+"""Property test: paged-pool accounting is invariant to ``tp_size``.
+
+The tensor-parallel contract for the paged KV plane (serving/paged_kv.py,
+DESIGN.md §Sharded serving) is that block tables are REPLICATED host
+state: one block id addresses the same page slot on every device, so
+refcounts, the free list, CoW copy lists and snapshot/rollback behave
+identically whatever the tp degree — ``tp_size`` changes how a page's
+kv-heads are laid out across devices, never which pages a sequence owns.
+
+This is enforced structurally (``PagedKVPool`` stores ``tp_size`` as
+metadata only) and verified here behaviorally: any random sequence of
+append / truncate / snapshot / restore / discard / adopt / free ops,
+including pool-exhaustion rollbacks and copy-on-write on shared tails,
+produces a bit-identical observable trace (returned blocks, copy pairs,
+freed lists, refcount vector, free/used counts) at tp_size 1, 2 and 4.
+
+Runs under hypothesis when available (CI installs it); falls back to a
+seeded random-walk generator otherwise — the container image has no
+hypothesis and new dependencies cannot be installed, so the fallback is
+the locally-executed path.
+"""
+
+import random
+
+import pytest
+
+from repro.serving.paged_kv import PagedKVPool, PagedSeq, PoolExhausted
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container image: fall back to seeded random
+    HAVE_HYPOTHESIS = False
+
+NUM_BLOCKS = 12
+BLOCK_SIZE = 4
+N_SEQS = 3
+OPS = ("append", "truncate", "snapshot", "restore", "discard", "adopt",
+       "free")
+
+
+def _run_trace(tp_size, ops):
+    """Apply an op program to a fresh pool and return the full observable
+    trace: per-op results plus the complete accounting state after each
+    op.  Two traces being equal means the two pools were observationally
+    indistinguishable at every step."""
+    pool = PagedKVPool(NUM_BLOCKS, BLOCK_SIZE, tp_size=tp_size)
+    seqs = [PagedSeq(pool) for _ in range(N_SEQS)]
+    snaps = [[] for _ in range(N_SEQS)]      # per-seq snapshot stacks
+    trace = []
+    for (i, op, arg) in ops:
+        seq = seqs[i]
+        if op == "append":
+            try:
+                out = seq.append(arg % 9)
+            except PoolExhausted:
+                out = "exhausted"
+        elif op == "truncate":
+            out = seq.truncate(arg % (seq.length + 1))
+        elif op == "snapshot":
+            snaps[i].append(seq.snapshot())
+            out = snaps[i][-1].blocks
+        elif op == "restore":
+            out = seq.restore(snaps[i].pop()) if snaps[i] else None
+        elif op == "discard":
+            if snaps[i]:
+                seq.discard_snapshot(snaps[i].pop())
+            out = None
+        elif op == "adopt":
+            # prefix-cache hit path: an empty sequence adopts another
+            # sequence's snapshot (shared read-only blocks -> later
+            # appends/truncates exercise copy-on-write)
+            donor = snaps[arg % N_SEQS]
+            if seq.blocks or not donor:
+                out = None
+            else:
+                seq.adopt(donor[-1].blocks, donor[-1].length)
+                out = tuple(seq.blocks)
+        elif op == "free":
+            seq.free()
+            out = None
+        trace.append((op, out, pool.num_free, pool.num_used,
+                      tuple(pool.refcounts()),
+                      tuple((tuple(s.blocks), s.length) for s in seqs)))
+    # teardown must drain clean regardless of tp_size too
+    for i, seq in enumerate(seqs):
+        for snap in snaps[i]:
+            seq.discard_snapshot(snap)
+        seq.free()
+    trace.append(("drain", None, pool.num_free, pool.num_used,
+                  tuple(pool.refcounts()), None))
+    assert pool.num_used == 0
+    return trace
+
+
+def _assert_tp_invariant(ops):
+    ref = _run_trace(1, ops)
+    for tp_size in (2, 4):
+        assert _run_trace(tp_size, ops) == ref
+
+
+def _random_ops(rng, n):
+    return [(rng.randrange(N_SEQS), rng.choice(OPS), rng.randrange(24))
+            for _ in range(n)]
+
+
+if HAVE_HYPOTHESIS:
+    _op = st.tuples(st.integers(0, N_SEQS - 1), st.sampled_from(OPS),
+                    st.integers(0, 23))
+
+    @given(ops=st.lists(_op, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_pool_accounting_tp_invariant(ops):
+        _assert_tp_invariant(ops)
+else:
+    @pytest.mark.parametrize("seed", range(30))
+    def test_pool_accounting_tp_invariant(seed):
+        rng = random.Random(seed)
+        _assert_tp_invariant(_random_ops(rng, 60))
+
+
+def test_pool_accounting_tp_invariant_exhaustion_heavy():
+    """Long appends against the small pool: exhaustion rollbacks and
+    truncate-CoW under snapshot sharing, still tp-invariant."""
+    rng = random.Random(1234)
+    ops = []
+    for _ in range(80):
+        i = rng.randrange(N_SEQS)
+        op = rng.choice(("append", "append", "snapshot", "truncate",
+                         "restore", "free"))
+        ops.append((i, op, rng.randrange(40)))
+    _assert_tp_invariant(ops)
+
+
+def test_tp_size_is_metadata_only():
+    pool = PagedKVPool(8, 4, tp_size=2)
+    assert pool.tp_size == 2
+    assert pool.num_free == 8
+    with pytest.raises(ValueError):
+        PagedKVPool(8, 4, tp_size=0)
